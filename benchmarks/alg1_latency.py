@@ -1,0 +1,53 @@
+"""Latency of the server-side Algorithm-1 components (the paper's
+complexity analysis, §IV/§V): swap matching, power allocation (closed
+form + CCP), data selection (gradient projection + recovery, and the
+exact oracle)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import default_system, matching, power, sample_round, selection
+
+from .common import emit
+
+
+def _time(fn, n=3):
+    fn()  # warmup / jit
+    t0 = time.time()
+    for _ in range(n):
+        fn()
+    return (time.time() - t0) / n * 1e6
+
+
+def run():
+    sys_ = default_system(K=10, N=5, Q=2, D_hat=200)
+    st = sample_round(jax.random.PRNGKey(0), sys_)
+
+    us = _time(lambda: matching.swap_matching(sys_, st.h, st.alpha), n=2)
+    emit("alg2_swap_matching", us, "evaluator=closed_form")
+
+    res = matching.swap_matching(sys_, st.h, st.alpha)
+    rho = jnp.asarray(res.rho)
+    us = _time(lambda: jax.block_until_ready(
+        power.closed_form_power(sys_, rho, st.h, st.alpha)[0]))
+    emit("power_closed_form", us, "beyond_paper_exact")
+
+    t0 = time.time()
+    power.ccp_power(sys_, rho, st.h, st.alpha)
+    emit("alg3_ccp_power", (time.time() - t0) * 1e6, "paper_faithful")
+
+    us = _time(lambda: jax.block_until_ready(
+        selection.faithful_selection(sys_, st.sigma, st.sigma_mask,
+                                     steps=400)), n=2)
+    emit("alg4_5_selection_faithful", us, "gp400+lambda_recovery")
+
+    us = _time(lambda: jax.block_until_ready(
+        selection.exact_selection(sys_, st.sigma, st.sigma_mask)))
+    emit("selection_exact_oracle", us, "beyond_paper_exact")
+
+
+if __name__ == "__main__":
+    run()

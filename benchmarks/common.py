@@ -1,0 +1,75 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import json
+import os
+import time
+import types
+
+import jax
+import numpy as np
+
+from repro.core import default_system
+from repro.data import SyntheticImages, non_iid_split
+from repro.fed import FEELConfig, FEELTrainer
+from repro.models import cnn
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "experiments")
+
+
+def save_json(name: str, obj) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, name), "w") as f:
+        json.dump(obj, f, indent=1)
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def make_feel_trainer(scheme: str, *, rounds_seed: int = 0, K: int = 10,
+                      side: int = 16, d_hat: int = 40,
+                      mislabel_prop: float = 0.1, eps_override=None,
+                      selection: str = "faithful", gp_steps: int = 150):
+    """Paper §VI setup, reduced for the CPU container: smaller images /
+    D̂ but identical structure (non-IID one-class devices, N=5 RBs,
+    Q=2, odd/even cost-reward-availability asymmetry)."""
+    train = SyntheticImages.make(4000, side=side, seed=0)
+    test = SyntheticImages.make(1000, side=side, seed=1)
+    data = non_iid_split(train, test, K=K, per_device=400,
+                         mislabel_prop=mislabel_prop, seed=rounds_seed)
+    sys_ = default_system(K=K, N=5, Q=2, D_hat=d_hat)
+    if eps_override is not None:
+        import dataclasses
+        import jax.numpy as jnp
+        sys_ = dataclasses.replace(
+            sys_, eps=jnp.full((K,), float(eps_override)))
+    cfg = FEELConfig(scheme=scheme, d_hat=d_hat, eval_every=10,
+                     selection_method=selection, gp_steps=gp_steps,
+                     seed=rounds_seed)
+    cc = cnn.CNNConfig(side=side)
+    params = cnn.init(jax.random.PRNGKey(rounds_seed), cc)
+    model = types.SimpleNamespace(features=cnn.features, apply=cnn.apply,
+                                  loss_fn=cnn.loss_fn,
+                                  accuracy=cnn.accuracy)
+    return FEELTrainer(sys_, data, model, params, cfg)
+
+
+def run_scheme(scheme: str, rounds: int, **kw):
+    tr = make_feel_trainer(scheme, **kw)
+    t0 = time.time()
+    ms = tr.run(rounds)
+    dt = time.time() - t0
+    accs = [(m.round, m.test_acc) for m in ms if m.test_acc is not None]
+    return {
+        "scheme": scheme,
+        "rounds": rounds,
+        "acc_curve": accs,
+        "final_acc": accs[-1][1],
+        "cum_net_cost": ms[-1].cum_net_cost,
+        "cost_curve": [(m.round, m.cum_net_cost) for m in ms],
+        "bad_frac_last": float(np.mean(
+            [m.frac_mislabeled_selected for m in ms[-10:]])),
+        "seconds": dt,
+        "us_per_round": dt / max(rounds, 1) * 1e6,
+    }

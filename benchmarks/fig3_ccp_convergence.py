@@ -1,0 +1,50 @@
+"""Paper Fig. 3: Algorithm 3 (CCP power allocation) convergence from
+different random feasible initial points — all trajectories must reach
+the same objective, in a handful of iterations."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import default_system, matching, power, sample_round
+
+from .common import emit, save_json
+
+
+def run(n_inits: int = 5, seed: int = 7):
+    sys_ = default_system(K=10, N=5, Q=2, D_hat=20)
+    st = sample_round(jax.random.PRNGKey(seed), sys_)
+    res = matching.swap_matching(sys_, st.h, st.alpha)
+    rho = jnp.asarray(res.rho)
+    p_cf, _ = power.closed_form_power(sys_, rho, st.h, st.alpha)
+    cost_cf = float(jnp.sum(sys_.c[:, None] * rho * p_cf) * sys_.T)
+
+    rng = np.random.default_rng(seed)
+    trajs = []
+    t0 = time.time()
+    for i in range(n_inits):
+        scale = float(rng.uniform(1.2, 4.0))
+        p0 = jnp.minimum(p_cf * scale,
+                         sys_.p_max[:, None] * rho * (1 - 1e-4))
+        out = power.ccp_power(sys_, rho, st.h, st.alpha, p0=p0)
+        trajs.append([float(x) for x in out.trajectory])
+    dt = time.time() - t0
+
+    finals = [t[-1] for t in trajs]
+    spread = (max(finals) - min(finals)) / max(max(finals), 1e-12)
+    iters = [len(t) - 1 for t in trajs]
+    save_json("fig3_ccp.json", {"trajectories": trajs,
+                                "closed_form": cost_cf,
+                                "final_spread_rel": spread,
+                                "iterations": iters})
+    emit("fig3_ccp_convergence", dt / n_inits * 1e6,
+         f"spread={spread:.2e};iters={max(iters)};"
+         f"vs_closed_form={abs(finals[0] - cost_cf) / cost_cf:.2e}")
+    return spread, iters
+
+
+if __name__ == "__main__":
+    run()

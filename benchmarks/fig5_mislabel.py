@@ -1,0 +1,25 @@
+"""Paper Fig. 5: effect of the mislabeled proportion on test accuracy
+(fixed training length).  Proposed vs baseline 4 (the strongest
+baseline: all data + best RB)."""
+from __future__ import annotations
+
+import os
+
+from .common import emit, run_scheme, save_json
+
+
+def run(rounds: int | None = None, props=(0.0, 0.2, 0.4)):
+    rounds = rounds or int(os.environ.get("REPRO_FIG5_ROUNDS", "40"))
+    results = {}
+    for prop in props:
+        for scheme in ("proposed", "baseline4"):
+            r = run_scheme(scheme, rounds, mislabel_prop=prop)
+            results[f"{scheme}@{prop}"] = r
+            emit(f"fig5_{scheme}_p{prop}", r["us_per_round"],
+                 f"acc={r['final_acc']:.3f}")
+    save_json("fig5_mislabel.json", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,25 @@
+"""Paper Fig. 6: effect of device availability eps on accuracy and
+cumulative net cost (eps_k = eps for all k)."""
+from __future__ import annotations
+
+import os
+
+from .common import emit, run_scheme, save_json
+
+
+def run(rounds: int | None = None, eps_values=(0.2, 0.5, 1.0)):
+    rounds = rounds or int(os.environ.get("REPRO_FIG6_ROUNDS", "40"))
+    results = {}
+    for eps in eps_values:
+        for scheme in ("proposed", "baseline4"):
+            r = run_scheme(scheme, rounds, eps_override=eps)
+            results[f"{scheme}@{eps}"] = r
+            emit(f"fig6_{scheme}_eps{eps}", r["us_per_round"],
+                 f"acc={r['final_acc']:.3f};"
+                 f"cum_cost={r['cum_net_cost']:+.3f}")
+    save_json("fig6_availability.json", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+"""Regenerate the EXPERIMENTS.md roofline tables + variant comparison
+from experiments/dryrun.jsonl.
+
+    PYTHONPATH=src python -m benchmarks.report            # markdown
+    PYTHONPATH=src python -m benchmarks.report --variants # §Perf deltas
+"""
+from __future__ import annotations
+
+import argparse
+
+from .roofline import load
+
+
+def baseline_tables():
+    recs = load()
+    out = []
+    for mesh in ("16x16", "2x16x16"):
+        out.append(f"\n### Mesh {mesh} (baseline)\n")
+        out.append("| arch | shape | compute s | memory s (UB) | "
+                   "collective s | bottleneck | MODEL/HLO | "
+                   "params/dev GB |")
+        out.append("|---|---|---|---|---|---|---|---|")
+        for (a, s, m, v), r in recs.items():
+            if m != mesh or v != "baseline":
+                continue
+            if not r.get("ok"):
+                out.append(f"| {a} | {s} | - | - | - | FAILED | - | - |")
+                continue
+            args = (r["memory"].get("argument_bytes") or 0) / 1e9
+            out.append(
+                f"| {a} | {s} | {r['compute_term_s']:.3g} | "
+                f"{r['memory_term_s']:.3g} | "
+                f"{r['collective_term_s']:.3g} | {r['bottleneck']} | "
+                f"{(r.get('useful_ratio') or 0):.3f} | {args:.2f} |")
+    return "\n".join(out)
+
+
+def variant_table():
+    recs = load()
+    rows = {}
+    for (a, s, m, v), r in recs.items():
+        if m != "16x16" or not r.get("ok"):
+            continue
+        rows.setdefault((a, s), {})[v] = r
+    out = ["| arch | shape | variant | compute s | memory s | "
+           "collective s | useful |", "|---|---|---|---|---|---|---|"]
+    for (a, s), vs in rows.items():
+        if len(vs) < 2:
+            continue
+        for v, r in vs.items():
+            out.append(f"| {a} | {s} | {v} | {r['compute_term_s']:.3g} | "
+                       f"{r['memory_term_s']:.3g} | "
+                       f"{r['collective_term_s']:.3g} | "
+                       f"{(r.get('useful_ratio') or 0):.3f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variants", action="store_true")
+    args = ap.parse_args()
+    print(variant_table() if args.variants else baseline_tables())
+
+
+if __name__ == "__main__":
+    main()

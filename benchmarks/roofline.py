@@ -1,0 +1,92 @@
+"""Roofline table from the dry-run records (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun.jsonl, keeps the latest record per
+(arch, shape, mesh, variant), prints the three roofline terms, the
+bottleneck, and MODEL_FLOPS/HLO_FLOPs usefulness ratio.
+"""
+from __future__ import annotations
+
+import json
+import os
+from collections import OrderedDict
+
+from .common import emit
+
+DRYRUN = os.environ.get("REPRO_DRYRUN", "experiments/dryrun.jsonl")
+
+
+def load(path: str = DRYRUN):
+    recs = OrderedDict()
+    if not os.path.exists(path):
+        return recs
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            key = (r["arch"], r["shape"], r["mesh"],
+                   r.get("variant", "baseline"))
+            recs[key] = r  # later lines win
+    return recs
+
+
+def table(recs, mesh_filter: str | None = "16x16",
+          variant: str = "baseline"):
+    rows = []
+    for (arch, shape, mesh, var), r in recs.items():
+        if mesh_filter and mesh != mesh_filter:
+            continue
+        if var != variant:
+            continue
+        if not r.get("ok"):
+            rows.append((arch, shape, mesh, "FAILED", r.get("error")))
+            continue
+        rows.append((arch, shape, mesh, r))
+    return rows
+
+
+def run():
+    recs = load()
+    if not recs:
+        emit("roofline", 0.0, "no dryrun.jsonl yet")
+        return
+    for mesh in ("16x16", "2x16x16"):
+        for row in table(recs, mesh):
+            arch, shape = row[0], row[1]
+            r = row[3]
+            if r == "FAILED":
+                emit(f"roofline_{mesh}_{arch}_{shape}", 0.0, "FAILED")
+                continue
+            step = max(r["compute_term_s"], r["memory_term_s"],
+                       r["collective_term_s"])
+            emit(f"roofline_{mesh}_{arch}_{shape}", step * 1e6,
+                 f"bottleneck={r['bottleneck']};"
+                 f"compute={r['compute_term_s']:.3g}s;"
+                 f"memory={r['memory_term_s']:.3g}s;"
+                 f"collective={r['collective_term_s']:.3g}s;"
+                 f"useful={r.get('useful_ratio') or 0:.2f}")
+
+
+def markdown_table(mesh: str = "16x16", variant: str = "baseline") -> str:
+    """Render §Roofline markdown (used to build EXPERIMENTS.md)."""
+    recs = load()
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "bottleneck | MODEL/HLO | what would move it |",
+             "|---|---|---|---|---|---|---|---|"]
+    for row in table(recs, mesh, variant):
+        arch, shape = row[0], row[1]
+        r = row[3]
+        if r == "FAILED":
+            lines.append(f"| {arch} | {shape} | - | - | - | FAILED | - | "
+                         f"{row[4]} |")
+            continue
+        lines.append(
+            f"| {arch} | {shape} | {r['compute_term_s']:.3g} | "
+            f"{r['memory_term_s']:.3g} | {r['collective_term_s']:.3g} | "
+            f"{r['bottleneck']} | {r.get('useful_ratio') or 0:.2f} | |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    run()

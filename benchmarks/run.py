@@ -1,0 +1,56 @@
+"""Benchmark harness: one entry per paper table/figure + the roofline
+report.  Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --fast     # skip fig4/5/6
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the multi-round training figures")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: alg1,fig3,lemma3,fig4,"
+                         "fig5,fig6,roofline")
+    args = ap.parse_args()
+
+    from . import (alg1_latency, fig3_ccp_convergence, fig4_convergence_cost,
+                   fig5_mislabel, fig6_availability, lemma3_bound, roofline)
+
+    benches = [
+        ("alg1", alg1_latency.run),
+        ("fig3", fig3_ccp_convergence.run),
+        ("lemma3", lemma3_bound.run),
+        ("roofline", roofline.run),
+    ]
+    if not args.fast:
+        benches += [
+            ("fig4", fig4_convergence_cost.run),
+            ("fig5", fig5_mislabel.run),
+            ("fig6", fig6_availability.run),
+        ]
+    if args.only:
+        keep = set(args.only.split(","))
+        benches = [b for b in benches if b[0] in keep]
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in benches:
+        try:
+            fn()
+        except Exception as e:  # keep the harness going
+            failed.append(name)
+            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

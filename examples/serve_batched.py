@@ -1,0 +1,28 @@
+"""Batched serving example: prefill + KV-cache greedy decode.
+
+Runs the same serve_step the decode dry-run shapes lower, on a
+CPU-sized reduced config.  Try --arch deepseek-v3-671b --mla-absorbed
+to exercise the absorbed-MLA decode path, or --arch falcon-mamba-7b
+for the O(1)-state SSM decode.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch gemma3-12b
+"""
+import argparse
+
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    ap.add_argument("--mla-absorbed", action="store_true")
+    args = ap.parse_args()
+    serve(args.arch, args.batch, args.prompt_len, args.new_tokens,
+          smoke=True, mla_absorbed=args.mla_absorbed)
+
+
+if __name__ == "__main__":
+    main()

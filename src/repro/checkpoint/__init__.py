@@ -1,0 +1,3 @@
+from .checkpoint import load_pytree, restore_sharded, save_pytree
+
+__all__ = ["save_pytree", "load_pytree", "restore_sharded"]

@@ -1,0 +1,17 @@
+"""The paper's contribution: joint resource allocation + data selection
+for federated edge learning (FEEL), implemented in JAX.
+
+Public surface:
+  * SystemParams / RoundState / default_system / sample_round
+  * channel: NOMA + SIC rates and feasibility
+  * cost: energy / reward / net-cost model (eqs. 7-18)
+  * delta: convergence-gap objective (eqs. 22/26)
+  * power: Algorithm 3 (CCP) + exact closed form
+  * matching: Algorithm 2 (swap matching)
+  * selection: Algorithms 4-5 + exact oracle
+  * joint: Algorithm 1 + baselines 1-4
+  * convergence: Lemmas 1-3 made executable
+"""
+from . import channel, convergence, cost, delta, joint, matching, power, selection  # noqa: F401
+from .joint import RoundDecision, baseline_scheme, proposed_scheme  # noqa: F401
+from .types import RoundState, SystemParams, default_system, sample_round  # noqa: F401

@@ -1,0 +1,77 @@
+"""NOMA uplink channel model with SIC decoding (paper §II-C).
+
+The server decodes, on each RB, the device with the highest channel
+power gain first, treating all *weaker* co-RB devices as interference,
+then subtracts and repeats.  With devices sorted ascending by gain the
+interference seen by device k is I_{k,n} = sum_{t: h_t < h_k} p_t h_t + N0
+(eq. (29)/(31) of the paper).
+
+All functions operate on dense (K, N) arrays with an RB-assignment
+matrix ``rho`` in {0,1}^{K x N}; they are jit-safe.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .types import SystemParams
+
+Array = jax.Array
+
+
+def interference(rho: Array, p: Array, h: Array, N0: Array) -> Array:
+    """I_{k,n}: interference + noise seen by device k on RB n.
+
+    Weaker-gain co-RB devices interfere (SIC decode order: strong first).
+    Ties are broken by device index so the ordering is always strict.
+    """
+    K = h.shape[0]
+    contrib = rho * p * h  # (K, N) received power per device/RB
+    # strict ordering: (h_t, t) < (h_k, k) lexicographically
+    h_t = h[:, None, :]  # (t, 1, n)
+    h_k = h[None, :, :]  # (1, k, n)
+    t_idx = jnp.arange(K)[:, None, None]
+    k_idx = jnp.arange(K)[None, :, None]
+    weaker = (h_t < h_k) | ((h_t == h_k) & (t_idx < k_idx))  # (t, k, n)
+    interf = jnp.einsum("tkn,tn->kn", weaker.astype(p.dtype), contrib)
+    return interf + N0
+
+
+def sinr(rho: Array, p: Array, h: Array, N0: Array) -> Array:
+    """Per-(device, RB) SINR under SIC."""
+    return rho * p * h / interference(rho, p, h, N0)
+
+
+def rate(sys: SystemParams, rho: Array, p: Array, h: Array) -> Array:
+    """Achievable rate r_{k,n} [bits/s] (paper eq. below (15))."""
+    return sys.B * jnp.log2(1.0 + sinr(rho, p, h, sys.N0))
+
+
+def rate_per_device(sys: SystemParams, rho: Array, p: Array,
+                    h: Array) -> Array:
+    """sum_n r_{k,n} — each device occupies at most one RB (eq. (13))."""
+    return jnp.sum(rate(sys, rho, p, h), axis=1)
+
+
+def upload_feasible(sys: SystemParams, rho: Array, p: Array, h: Array,
+                    alpha: Array, rtol: float = 1e-4) -> Array:
+    """Constraint (16): r_k * T >= alpha_k * L, per device (boolean)."""
+    lhs = rate_per_device(sys, rho, p, h) * sys.T
+    rhs = alpha * sys.L
+    return lhs >= rhs * (1.0 - rtol)
+
+
+def assignment_valid(sys: SystemParams, rho: Array, alpha: Array) -> Array:
+    """Constraints (11)-(14) as a single boolean."""
+    binary = jnp.all((rho == 0) | (rho == 1))
+    per_rb = jnp.all(jnp.sum(rho, axis=0) <= sys.Q)  # (12)
+    per_dev = jnp.all(jnp.sum(rho, axis=1) <= 1)  # (13)
+    avail = jnp.all(rho <= alpha[:, None])  # (14)
+    return binary & per_rb & per_dev & avail
+
+
+def rho_from_assignment(assign: Array, K: int, N: int) -> Array:
+    """Dense rho from an assignment vector (K,) with values in [0,N) or -1."""
+    cols = jnp.clip(assign, 0, N - 1)
+    onehot = jax.nn.one_hot(cols, N, dtype=jnp.float32)
+    return onehot * (assign >= 0).astype(jnp.float32)[:, None]

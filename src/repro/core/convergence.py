@@ -1,0 +1,59 @@
+"""Convergence-bound utilities (paper Lemmas 1-3).
+
+These make the theory executable so tests/benchmarks can check that the
+implementation satisfies the paper's analytical claims:
+
+* ``aggregate`` — eq. (19), inverse-propensity-weighted aggregation;
+  Lemma 1: E[g_hat] = grad L(w).
+* ``one_round_bound`` — RHS of Lemma 2 for observed quantities.
+* ``multi_round_bound`` — Lemma 3's product-form upper bound.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import delta as delta_mod
+from .types import SystemParams
+
+Array = jax.Array
+
+
+def aggregate(sys: SystemParams, local_grads: Array, alpha: Array) -> Array:
+    """eq. (19): g_hat = (1/|D̂|) sum_k (|D̂_k|/eps_k) alpha_k g_k.
+
+    ``local_grads``: (K, P) stacked local gradients (already averaged
+    over each device's selected samples, eq. (4)).
+    """
+    w = (sys.D_hat / sys.eps) * alpha  # (K,)
+    return jnp.einsum("k,kp->p", w, local_grads) / sys.D_hat_total
+
+
+def one_round_bound(sys: SystemParams, gap_i: Array, g_norm_sq: Array,
+                    eta: Array, beta: Array, dlt: Array,
+                    sigma: Array) -> Array:
+    """Lemma 2 RHS: E[L(w+) - L*] <= gap - eta ||g||^2 + (beta eta^2 / 2|D̂|^2) Delta."""
+    d_term = delta_mod.delta(sys, dlt, sigma)
+    return (gap_i - eta * g_norm_sq
+            + beta * eta ** 2 / (2.0 * sys.D_hat_total ** 2) * d_term)
+
+
+def multi_round_bound(sys: SystemParams, gap_1: float, mu: float,
+                      beta: float, etas: Sequence[float],
+                      deltas: Sequence[float]) -> float:
+    """Lemma 3: product contraction + weighted Delta accumulation."""
+    i = len(etas)
+    prod = 1.0
+    for eta in etas:
+        prod *= (1.0 - 2.0 * mu * eta)
+    acc = 0.0
+    for t in range(i):
+        a_t = 1.0
+        for j in range(t + 1, i):
+            a_t *= (1.0 - 2.0 * mu * etas[j])
+        acc += a_t * etas[t] ** 2 * deltas[t]
+    total = float(jnp.asarray(prod)) * gap_1 \
+        + beta / (2.0 * float(sys.D_hat_total) ** 2) * acc
+    return total

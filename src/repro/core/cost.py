@@ -1,0 +1,51 @@
+"""Energy / reward / net-cost model (paper eqs. (7)-(18))."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .types import SystemParams
+
+Array = jax.Array
+
+
+def compute_time(sys: SystemParams) -> Array:
+    """tau_k = F_k |D̂_k| / f_k  (eq. (8))."""
+    return sys.F * sys.D_hat / sys.f
+
+
+def energy_compute(sys: SystemParams) -> Array:
+    """E^cmp_k = kappa F_k |D̂_k| f_k^2  (eq. (9))."""
+    return sys.kappa * sys.F * sys.D_hat * sys.f ** 2
+
+
+def cost_compute(sys: SystemParams) -> Array:
+    """C^cmp = sum_k c_k E^cmp_k  (eq. (10)). Constant w.r.t. all decisions."""
+    return jnp.sum(sys.c * energy_compute(sys))
+
+
+def energy_upload(sys: SystemParams, rho: Array, p: Array) -> Array:
+    """E^com_k = sum_n rho_{k,n} p_{k,n} T  (below eq. (16))."""
+    return jnp.sum(rho * p, axis=1) * sys.T
+
+
+def cost_upload(sys: SystemParams, rho: Array, p: Array) -> Array:
+    """C^com = sum_k c_k E^com_k  (eq. (17))."""
+    return jnp.sum(sys.c * energy_upload(sys, rho, p))
+
+
+def reward(sys: SystemParams, n_selected: Array) -> Array:
+    """R(M) = sum_k q_k |M_k|  (eq. (7)); n_selected is (K,)."""
+    return jnp.sum(sys.q * n_selected)
+
+
+def net_cost(sys: SystemParams, rho: Array, p: Array,
+             n_selected: Array) -> Array:
+    """C = C^com + C^cmp - R  (eq. (18))."""
+    return (cost_upload(sys, rho, p) + cost_compute(sys)
+            - reward(sys, n_selected))
+
+
+def resource_cost(sys: SystemParams, rho: Array, p: Array) -> Array:
+    """Objective of Problem 3: C^com + C^cmp (reward is delta-only)."""
+    return cost_upload(sys, rho, p) + cost_compute(sys)

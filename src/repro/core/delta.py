@@ -1,0 +1,70 @@
+"""The convergence-gap objective Delta (paper eqs. (22)/(26)).
+
+Delta(M) is the only controllable term of the one-round descent bound
+(Lemma 2); minimizing it speeds up convergence.  We provide:
+
+* ``delta_raw``  — literal eq. (26) double sum (used as oracle in tests);
+* ``delta``      — the algebraically simplified, per-device decoupled
+  form  Delta_hat = sum_k A_k * (sum_j delta_kj sigma_kj)/(sum_j delta_kj)
+  with A_k = |D̂_k|^2/eps_k + |D̂_k|(|D̂|-|D̂_k|)  (DESIGN.md §4, tested
+  equal to ``delta_raw``);
+* ``objective``  — the full Problem-4 objective
+  lambda * Delta_hat(delta) + (1-lambda) * C_hat(delta, rho, p).
+
+All functions accept soft (continuous) selection variables so they can
+be differentiated for the gradient-projection solver (Alg. 4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import cost as cost_mod
+from .types import SystemParams
+
+Array = jax.Array
+_EPSDIV = 1e-12
+
+
+def selected_mean_sigma(delta: Array, sigma: Array) -> Array:
+    """(sum_j delta sigma) / (sum_j delta) per device; delta (K,J)."""
+    num = jnp.sum(delta * sigma, axis=1)
+    den = jnp.sum(delta, axis=1)
+    return num / jnp.maximum(den, _EPSDIV)
+
+
+def delta(sys: SystemParams, dlt: Array, sigma: Array) -> Array:
+    """Simplified Delta_hat (eq. (26)) — O(K*J)."""
+    return jnp.sum(sys.a_weights() * selected_mean_sigma(dlt, sigma))
+
+
+def delta_raw(sys: SystemParams, dlt: Array, sigma: Array) -> Array:
+    """Literal eq. (26) double sum — O(K^2 * J); test oracle."""
+    d = sys.D_hat.astype(jnp.float32)
+    mean_sel = selected_mean_sigma(dlt, sigma)  # (K,)
+    own = d * d / sys.eps * mean_sel
+    cross_t = d * mean_sel  # |D̂_t| * S_t/m_t
+    # sum_{t != k} |D̂_k| |D̂_t| S_t/m_t
+    cross = d * (jnp.sum(cross_t) - cross_t)
+    return jnp.sum(own + cross)
+
+
+def objective(sys: SystemParams, dlt: Array, sigma: Array,
+              rho: Array, p: Array) -> Array:
+    """Problem 2/4 objective: lambda*Delta_hat + (1-lambda)*C_hat (eq. (27))."""
+    n_sel = jnp.sum(dlt, axis=1)
+    c_hat = (cost_mod.cost_upload(sys, rho, p) + cost_mod.cost_compute(sys)
+             - jnp.sum(sys.q * n_sel))
+    return sys.lam * delta(sys, dlt, sigma) + (1.0 - sys.lam) * c_hat
+
+
+def selection_only_objective(sys: SystemParams, dlt: Array,
+                             sigma: Array) -> Array:
+    """The delta-dependent part of the Problem-4 objective.
+
+    lambda*Delta_hat(delta) - (1-lambda)*sum_k q_k sum_j delta_kj.
+    (C^com and C^cmp are constants w.r.t. delta.)
+    """
+    n_sel = jnp.sum(dlt, axis=1)
+    return (sys.lam * delta(sys, dlt, sigma)
+            - (1.0 - sys.lam) * jnp.sum(sys.q * n_sel))

@@ -1,0 +1,122 @@
+"""Algorithm 1: joint resource allocation + data selection, and the four
+baseline schemes of paper §VI-A.
+
+The server-side round decision is:
+  1. solve Problem 3 (RB assignment + power) via Algorithm 2/3,
+  2. solve Problem 4 (data selection) via Algorithms 4/5,
+and ship (delta*, rho*, p*) back to the devices.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import cost as cost_mod
+from . import delta as delta_mod
+from . import matching as matching_mod
+from . import power as power_mod
+from . import selection as selection_mod
+from .types import RoundState, SystemParams
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class RoundDecision:
+    """Server decision for one communication round."""
+
+    rho: np.ndarray      # (K, N) RB assignment
+    p: np.ndarray        # (K, N) powers
+    delta: np.ndarray    # (K, J) binary data selection
+    net_cost: float      # eq. (18)
+    delta_obj: float     # Delta_hat(delta), eq. (26)
+    objective: float     # Problem-2 objective
+    feasible: bool
+    swaps: int = 0
+
+
+def _finish(sys: SystemParams, rho, p, delta, state: RoundState,
+            feasible: bool, swaps: int = 0) -> RoundDecision:
+    rho_j = jnp.asarray(rho, jnp.float32)
+    p_j = jnp.asarray(p, jnp.float32)
+    delta_j = jnp.asarray(delta, jnp.float32)
+    n_sel = jnp.sum(delta_j, axis=1)
+    nc = float(cost_mod.net_cost(sys, rho_j, p_j, n_sel))
+    dv = float(delta_mod.delta(sys, delta_j, state.sigma))
+    obj = float(sys.lam) * dv + (1.0 - float(sys.lam)) * nc
+    return RoundDecision(rho=np.asarray(rho), p=np.asarray(p),
+                         delta=np.asarray(delta), net_cost=nc, delta_obj=dv,
+                         objective=obj, feasible=feasible, swaps=swaps)
+
+
+def proposed_scheme(sys: SystemParams, state: RoundState,
+                    selection_method: str = "faithful",
+                    power_evaluator: str = "closed_form",
+                    gp_steps: int = 400,
+                    gp_step0: float = 0.3) -> RoundDecision:
+    """Algorithm 1 (the paper's proposed scheme)."""
+    match = matching_mod.swap_matching(sys, state.h, state.alpha,
+                                       evaluator=power_evaluator)
+    delta = selection_mod.solve_selection(
+        sys, state.sigma, state.sigma_mask, method=selection_method,
+        steps=gp_steps, step0=gp_step0)
+    return _finish(sys, match.rho, match.p, delta, state,
+                   feasible=match.feasible, swaps=match.swaps)
+
+
+# --------------------------------------------------------------------------
+# Baselines 1-4 (paper §VI-A).  Data: random half / all samples.
+# RB: each device prefers its min- / max-gain RB (greedy, capacity Q).
+# Power for all baselines comes from Algorithm 3's problem — we use the
+# exact closed form (identical optimum).
+# --------------------------------------------------------------------------
+
+def _greedy_rb(sys: SystemParams, h: np.ndarray, alpha: np.ndarray,
+               prefer_max: bool) -> np.ndarray:
+    K, N, Q = sys.K, sys.N, sys.Q
+    assign = np.full(K, -1, np.int64)
+    slots = np.full(N, Q, np.int64)
+    for k in np.flatnonzero(alpha > 0):
+        prefs = np.argsort(-h[k] if prefer_max else h[k], kind="stable")
+        for n in prefs:
+            if slots[n] > 0:
+                assign[k] = n
+                slots[n] -= 1
+                break
+    rho = np.zeros((K, N), np.float32)
+    m = assign >= 0
+    rho[np.flatnonzero(m), assign[m]] = 1.0
+    return rho
+
+
+def _random_half(key: jax.Array, mask: Array) -> Array:
+    """Random half of each device's samples (at least one)."""
+    scores = jax.random.uniform(key, mask.shape) * mask
+    n_valid = jnp.sum(mask, axis=1)
+    want = jnp.maximum(jnp.floor(n_valid / 2.0), 1.0)
+    ranks = jnp.argsort(jnp.argsort(-scores, axis=1), axis=1)
+    return (ranks < want[:, None]).astype(jnp.float32) * mask
+
+
+def baseline_scheme(sys: SystemParams, state: RoundState, index: int,
+                    key: Optional[jax.Array] = None) -> RoundDecision:
+    """Baselines 1-4: (half|all data) x (min|max gain RB)."""
+    if index not in (1, 2, 3, 4):
+        raise ValueError("baseline index must be 1..4")
+    half = index in (1, 2)
+    prefer_max = index in (2, 4)
+    if half:
+        assert key is not None, "baselines 1/2 need a PRNG key"
+        delta = _random_half(key, state.sigma_mask)
+    else:
+        delta = state.sigma_mask
+    h = np.asarray(state.h)
+    alpha = np.asarray(state.alpha)
+    rho = _greedy_rb(sys, h, alpha, prefer_max)
+    p, _, ok = power_mod.allocate_power(
+        sys, jnp.asarray(rho), state.h, state.alpha, method="closed_form")
+    return _finish(sys, rho, p, delta, state, feasible=ok)

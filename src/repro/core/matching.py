@@ -1,0 +1,188 @@
+"""Swap-matching RB assignment (paper §IV-A, Algorithm 2).
+
+Devices and RBs form a bipartite matching (Definition 1): each
+*available* device gets exactly one RB, each RB carries at most Q
+devices.  Starting from an initial matching, pairs of devices exchange
+RBs whenever the exchange strictly lowers the net cost (evaluated with
+the power allocator of §IV-B under the candidate assignment); the loop
+terminates because the cost is bounded below and strictly decreases.
+
+Implementation notes
+--------------------
+* The cost of a matching is separable per RB (each device occupies one
+  RB), so a swap between RBs n1, n2 only requires re-solving those two
+  RBs — this is what makes the O(U^2) swap sweep cheap.
+* ``evaluator="closed_form"`` (default) scores candidate assignments
+  with the exact per-RB solution; ``evaluator="ccp"`` uses the
+  paper-faithful Algorithm 3 (identical decisions up to solver
+  tolerance — the closed form *is* the optimum of (28); verified in
+  tests/test_power.py).
+* In addition to pairwise swaps we allow moves into *open slots*
+  (a swap with a virtual empty device), mirroring the open-house swaps
+  of the housing-assignment model [37] the paper builds on.  Disable
+  with ``allow_moves=False`` for the strictest reading of Alg. 2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from . import power as power_mod
+from .types import SystemParams
+
+_INF = float("inf")
+
+
+@dataclasses.dataclass
+class MatchingResult:
+    assign: np.ndarray    # (K,) RB index per device, -1 = unmatched
+    rho: np.ndarray       # (K, N) dense assignment
+    p: np.ndarray         # (K, N) powers
+    cost: float           # C^com (upload cost); add C^cmp for Problem-3 obj
+    swaps: int
+    sweeps: int
+    feasible: bool
+
+
+def _rb_cost(sys: SystemParams, members: np.ndarray, h: np.ndarray,
+             c: np.ndarray, p_max: np.ndarray, gamma: float,
+             N0: float, T: float) -> tuple[float, np.ndarray]:
+    """Exact min upload cost of one RB given its member devices.
+
+    ``members`` are device ids; ``h`` their gains on this RB.  Returns
+    (cost, powers) with cost=inf when any power exceeds its p_max.
+    """
+    if members.size == 0:
+        return 0.0, np.zeros((0,))
+    order = np.argsort(h, kind="stable")  # ascending: weakest first
+    p = np.zeros(members.size)
+    cum_i = N0
+    for r, idx in enumerate(order):
+        p[idx] = gamma * cum_i / max(h[idx], 1e-30)
+        cum_i += p[idx] * h[idx]
+        if p[idx] > p_max[idx] * (1 + 1e-9):
+            return _INF, p
+    return float(np.sum(c * p) * T), p
+
+
+class _Scorer:
+    """Caches per-RB costs for the current assignment."""
+
+    def __init__(self, sys: SystemParams, h: np.ndarray, alpha: np.ndarray,
+                 evaluator: str):
+        self.sys = sys
+        self.h = h
+        self.alpha = alpha
+        self.evaluator = evaluator
+        self.gamma = float(power_mod.snr_target(sys))
+        self.c = np.asarray(sys.c)
+        self.p_max = np.asarray(sys.p_max)
+        self.N0 = float(sys.N0)
+        self.T = float(sys.T)
+
+    def rb_cost(self, n: int, members: np.ndarray) -> float:
+        if self.evaluator == "closed_form":
+            cost, _ = _rb_cost(self.sys, members, self.h[members, n],
+                               self.c[members], self.p_max[members],
+                               self.gamma, self.N0, self.T)
+            return cost
+        # paper-faithful: per-RB CCP (Algorithm 3) on a masked assignment
+        import jax.numpy as jnp
+        K, N = self.h.shape
+        rho = np.zeros((K, N), np.float32)
+        rho[members, n] = 1.0
+        _, cost, ok = power_mod.allocate_power(
+            self.sys, jnp.asarray(rho), jnp.asarray(self.h),
+            jnp.asarray(self.alpha), method="ccp")
+        return cost if ok else _INF
+
+
+def swap_matching(sys: SystemParams, h, alpha, evaluator: str = "closed_form",
+                  allow_moves: bool = True, max_sweeps: int = 50,
+                  rng: Optional[np.random.Generator] = None) -> MatchingResult:
+    """Algorithm 2. ``h``: (K,N) gains; ``alpha``: (K,) availability."""
+    h = np.asarray(h, np.float64)
+    alpha = np.asarray(alpha, np.float64)
+    K, N, Q = sys.K, sys.N, sys.Q
+    scorer = _Scorer(sys, h, alpha, evaluator)
+    avail = np.flatnonzero(alpha > 0)
+
+    # ---- initial matching Psi_0: greedy best-gain with capacity ----
+    assign = np.full(K, -1, np.int64)
+    slots = np.full(N, Q, np.int64)
+    order = avail[np.argsort(-h[avail].max(axis=1), kind="stable")]
+    for k in order:
+        open_rbs = np.flatnonzero(slots > 0)
+        if open_rbs.size == 0:
+            break  # more available devices than N*Q slots: infeasible round
+        n = open_rbs[np.argmax(h[k, open_rbs])]
+        assign[k] = n
+        slots[n] -= 1
+
+    members = [np.flatnonzero(assign == n) for n in range(N)]
+    rb_costs = np.array([scorer.rb_cost(n, members[n]) for n in range(N)])
+
+    def try_reassign(k: int, n_from: int, n_to: int, j: Optional[int]):
+        """Cost delta of moving k from n_from to n_to (swapping with j)."""
+        m_from = members[n_from][members[n_from] != k]
+        m_to = members[n_to]
+        if j is not None:
+            m_to = m_to[m_to != j]
+            m_from = np.append(m_from, j)
+        m_to = np.append(m_to, k)
+        c_from = scorer.rb_cost(n_from, m_from)
+        c_to = scorer.rb_cost(n_to, m_to)
+        new = c_from + c_to
+        old = rb_costs[n_from] + rb_costs[n_to]
+        return new - old, (m_from, m_to, c_from, c_to)
+
+    swaps = 0
+    sweeps = 0
+    improved = True
+    while improved and sweeps < max_sweeps:
+        improved = False
+        sweeps += 1
+        for u in avail:
+            if assign[u] < 0:
+                continue
+            # pairwise swaps (the paper's swap operation)
+            for k in avail:
+                if k <= u or assign[k] < 0 or assign[k] == assign[u]:
+                    continue
+                d, upd = try_reassign(u, assign[u], assign[k], k)
+                if d < -1e-12:
+                    n_u, n_k = assign[u], assign[k]
+                    members[n_u], members[n_k] = upd[0], upd[1]
+                    rb_costs[n_u], rb_costs[n_k] = upd[2], upd[3]
+                    assign[u], assign[k] = n_k, n_u
+                    swaps += 1
+                    improved = True
+            # open-slot moves (housing-model open houses)
+            if allow_moves:
+                for n in range(N):
+                    if n == assign[u] or members[n].size >= Q:
+                        continue
+                    d, upd = try_reassign(u, assign[u], n, None)
+                    if d < -1e-12:
+                        n_u = assign[u]
+                        members[n_u], members[n] = upd[0], upd[1]
+                        rb_costs[n_u], rb_costs[n] = upd[2], upd[3]
+                        assign[u] = n
+                        swaps += 1
+                        improved = True
+
+    rho = np.zeros((K, N), np.float32)
+    matched = assign >= 0
+    rho[np.flatnonzero(matched), assign[matched]] = 1.0
+
+    # final powers under the chosen evaluator's assignment
+    import jax.numpy as jnp
+    p, cost, ok = power_mod.allocate_power(
+        sys, jnp.asarray(rho), jnp.asarray(h, np.float32),
+        jnp.asarray(alpha, np.float32), method="closed_form")
+    all_matched = bool(np.all(assign[avail] >= 0)) if avail.size else True
+    return MatchingResult(assign=assign, rho=rho, p=np.asarray(p),
+                          cost=cost, swaps=swaps, sweeps=sweeps,
+                          feasible=ok and all_matched and np.isfinite(cost))

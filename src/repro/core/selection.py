@@ -1,0 +1,174 @@
+"""Data selection (paper §V, Problem 4, Algorithms 4-5) + exact oracle.
+
+Faithful pipeline
+-----------------
+1. *Continuous relaxation* (Alg. 4): gradient projection on (36) with a
+   diminishing stepsize; the projection (37) onto
+   {0 <= delta <= 1, sum_j delta_kj >= 1} decouples per device and is
+   computed exactly (box clip, then capped-simplex projection via
+   bisection when the clipped sum falls below 1).
+2. *Binary recovery* (Alg. 5): the lambda-representation LP (39).
+   Substituting b = delta, a = 1 - delta the LP objective becomes
+       sum_kj [(1-delta†)^2 - (delta†)^2] delta_kj + const
+     = sum_kj (1 - 2 delta†_kj) delta_kj + const,
+   linear in delta over a box with the >=1-per-device constraint (a
+   totally-unimodular system, as the paper's Lemma 4 argues), so the
+   optimum is delta = 1[delta† > 1/2], repaired per device by selecting
+   argmax_j delta†_kj when the threshold selects nothing.  This *is*
+   the exact solution of (39) — no LP solver needed.
+
+Exact oracle (beyond paper, DESIGN.md §4)
+-----------------------------------------
+The Problem-4 objective decouples per device into
+    lambda * A_k * mean(sigma over selected) - (1-lambda) * q_k * m_k,
+and for a fixed selection size m the optimum takes the m smallest
+sigmas, so scanning prefix means of the sorted sigmas yields the global
+optimum in O(J log J).  ``exact_selection`` is jit-able and is what the
+large-model training path uses inside the jitted step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import delta as delta_mod
+from .types import SystemParams
+
+Array = jax.Array
+_BIG = 1e30
+
+
+# --------------------------------------------------------------------------
+# Projection (37): per-device {0<=d<=1, sum d >= 1} Euclidean projection.
+# --------------------------------------------------------------------------
+
+def _project_one(z: Array, mask: Array) -> Array:
+    """Project a single device's vector; masked entries pinned to 0."""
+    clipped = jnp.clip(z, 0.0, 1.0) * mask
+    need_simplex = jnp.sum(clipped) < 1.0
+
+    def capped_simplex(z):
+        # find tau with sum(clip(z + tau, 0, 1) * mask) == 1 by bisection
+        lo = 1.0 / jnp.maximum(jnp.sum(mask), 1.0) - jnp.max(
+            jnp.where(mask > 0, z, -_BIG))
+        lo = jnp.minimum(lo, 0.0) - 1.0
+        hi = 1.0 - jnp.min(jnp.where(mask > 0, z, _BIG))
+        hi = jnp.maximum(hi, 0.0) + 1.0
+
+        def body(_, lohi):
+            lo, hi = lohi
+            mid = 0.5 * (lo + hi)
+            s = jnp.sum(jnp.clip(z + mid, 0.0, 1.0) * mask)
+            return jnp.where(s < 1.0, mid, lo), jnp.where(s < 1.0, hi, mid)
+
+        lo, hi = jax.lax.fori_loop(0, 60, body, (lo, hi))
+        tau = 0.5 * (lo + hi)
+        return jnp.clip(z + tau, 0.0, 1.0) * mask
+
+    return jnp.where(need_simplex, capped_simplex(z), clipped)
+
+
+def project_feasible(z: Array, mask: Array) -> Array:
+    """Projection (37), vmapped over devices. z, mask: (K, J)."""
+    return jax.vmap(_project_one)(z, mask)
+
+
+# --------------------------------------------------------------------------
+# Algorithm 4: gradient projection on the continuous relaxation (36).
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def gradient_projection(sys: SystemParams, sigma: Array, mask: Array,
+                        steps: int = 400, step0: float = 0.3,
+                        init: Array | None = None) -> Array:
+    """Returns a stationary point delta† of (36) (continuous).
+
+    step0 controls WHICH stationary point of the non-convex fractional
+    objective the diminishing-step GP lands at: small step0 (~0.3)
+    yields the threshold-like filter that keeps most samples and drops
+    high-sigma outliers (the behaviour the paper's experiments rely
+    on); large step0 (~5.0) chases the *global* optimum of Problem 4,
+    which under the paper's lambda degenerates to ~1 sample/device and
+    stalls training (EXPERIMENTS.md §Paper-validation).  Faithful
+    either way — the paper does not specify the stepsize constant.
+    """
+    if init is None:
+        init = 0.5 * mask
+
+    def f(d):
+        # C^com/C^cmp are constants w.r.t. delta; argmin is unchanged.
+        return delta_mod.selection_only_objective(sys, d * mask, sigma)
+
+    grad_f = jax.grad(f)
+
+    def body(v, d):
+        step = step0 / (1.0 + v) ** 0.6  # sum a = inf, sum a^2 < inf
+        g = grad_f(d)
+        g = jnp.where(jnp.isfinite(g), g, 0.0)
+        # per-device normalization: the Delta term scales like A_k/m_k,
+        # which varies by orders of magnitude across devices; scale-free
+        # steps keep every device's subproblem moving at the same rate.
+        norm = jnp.max(jnp.abs(g), axis=1, keepdims=True)
+        g = g / jnp.maximum(norm, 1e-12)
+        return project_feasible(d - step * g, mask)
+
+    return jax.lax.fori_loop(0, steps, body, init * mask)
+
+
+# --------------------------------------------------------------------------
+# Algorithm 5: binary recovery via the lambda-representation LP (39).
+# --------------------------------------------------------------------------
+
+def binary_recovery(delta_cont: Array, mask: Array) -> Array:
+    """Exact solution of LP (39): threshold at 1/2 with >=1 repair."""
+    sel = (delta_cont > 0.5).astype(jnp.float32) * mask
+    none = jnp.sum(sel, axis=1) < 1.0
+    best = jnp.argmax(jnp.where(mask > 0, delta_cont, -_BIG), axis=1)
+    repair = jax.nn.one_hot(best, delta_cont.shape[1], dtype=jnp.float32)
+    return jnp.where(none[:, None], jnp.maximum(sel, repair * mask), sel)
+
+
+def faithful_selection(sys: SystemParams, sigma: Array, mask: Array,
+                       steps: int = 400, step0: float = 0.3) -> Array:
+    """Algorithms 4 + 5 end to end (the paper's data-selection solver)."""
+    d_cont = gradient_projection(sys, sigma, mask, steps=steps,
+                                 step0=step0)
+    return binary_recovery(d_cont, mask)
+
+
+# --------------------------------------------------------------------------
+# Exact per-device prefix-scan solver (beyond paper; also the jit-able
+# selector used inside large-model train steps).
+# --------------------------------------------------------------------------
+
+@jax.jit
+def exact_selection(sys: SystemParams, sigma: Array, mask: Array) -> Array:
+    """Global optimum of Problem 4 in O(K J log J)."""
+    A = sys.a_weights()  # (K,)
+    big_sigma = jnp.where(mask > 0, sigma, _BIG)
+    order = jnp.argsort(big_sigma, axis=1)
+    sorted_sigma = jnp.take_along_axis(big_sigma, order, axis=1)
+    m = jnp.arange(1, sigma.shape[1] + 1, dtype=jnp.float32)
+    prefix_mean = jnp.cumsum(jnp.where(sorted_sigma < _BIG, sorted_sigma,
+                                       0.0), axis=1) / m
+    valid = m[None, :] <= jnp.sum(mask, axis=1, keepdims=True)
+    obj = (sys.lam * A[:, None] * prefix_mean
+           - (1.0 - sys.lam) * sys.q[:, None] * m[None, :])
+    obj = jnp.where(valid, obj, _BIG)
+    best_m = jnp.argmin(obj, axis=1) + 1  # (K,) optimal selection size
+    ranks = jnp.argsort(order, axis=1)  # rank of each sample in sorted order
+    return (ranks < best_m[:, None]).astype(jnp.float32) * mask
+
+
+def solve_selection(sys: SystemParams, sigma: Array, mask: Array,
+                    method: str = "faithful", steps: int = 400,
+                    step0: float = 0.3) -> Array:
+    if method == "faithful":
+        return faithful_selection(sys, sigma, mask, steps=steps,
+                                  step0=step0)
+    if method == "exact":
+        return exact_selection(sys, sigma, mask)
+    raise ValueError(f"unknown selection method: {method}")

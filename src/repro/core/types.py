@@ -1,0 +1,124 @@
+"""Typed containers for the FEEL system model (paper §II).
+
+Everything is kept as plain arrays so the containers can cross the
+host/jit boundary freely. ``SystemParams`` holds the static wireless /
+cost / incentive constants; ``RoundState`` holds the per-round random
+state (channel gains, availability draws, per-sample gradient-norm
+scores sigma).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SystemParams:
+    """Static FEEL system parameters (paper Table I / §VI-A defaults).
+
+    Shapes: per-device quantities are (K,).
+    """
+
+    # -- topology -----------------------------------------------------
+    K: int = dataclasses.field(metadata=dict(static=True))  # devices
+    N: int = dataclasses.field(metadata=dict(static=True))  # resource blocks
+    Q: int = dataclasses.field(metadata=dict(static=True))  # max devices/RB
+
+    # -- radio --------------------------------------------------------
+    B: Array  # bandwidth per RB [Hz]
+    T: Array  # uplink duration [s]
+    L: Array  # gradient size [bits]
+    N0: Array  # noise power [W]
+    p_max: Array  # (K,) max tx power [W]
+
+    # -- compute / incentive -------------------------------------------
+    q: Array  # (K,) reward per selected sample
+    c: Array  # (K,) cost per Joule
+    f: Array  # (K,) CPU frequency [cycles/s]
+    F: Array  # (K,) CPU cycles per sample
+    kappa: Array  # energy capacitance coefficient
+    eps: Array  # (K,) availability probability eps_k
+    D_hat: Array  # (K,) |D̂_k| sampled sub-dataset sizes
+
+    # -- objective ------------------------------------------------------
+    lam: Array  # lambda trade-off in Problem 1
+
+    @property
+    def D_hat_total(self) -> Array:
+        return jnp.sum(self.D_hat)
+
+    def a_weights(self) -> Array:
+        """Per-device weights A_k of the decoupled Delta objective.
+
+        Delta_hat(delta) = sum_k A_k * mean(sigma over selected_k) with
+        A_k = |D̂_k|^2/eps_k + |D̂_k|(|D̂| - |D̂_k|)   (see DESIGN.md §4).
+        """
+        d = self.D_hat.astype(jnp.float32)
+        total = jnp.sum(d)
+        return d * d / self.eps + d * (total - d)
+
+
+def default_system(K: int = 10, N: int = 5, Q: int = 2,
+                   D_hat: int = 200, lam: float = 1e-3,
+                   L_bits: float = 0.56e6) -> SystemParams:
+    """Paper §VI-A simulation defaults.
+
+    c_k=5, q_k=0.002 for odd k (1-indexed), c_k=10, q_k=0.005 otherwise;
+    eps_k = 0.2 odd / 0.8 even; f_k = {0.1..1.0} GHz; F_k=20 cycles/sample;
+    kappa=1e-28; N=5, Q=2, B=2 MHz, N0=1e-9 W, T=500 ms, lambda=1e-3.
+    """
+    k_idx = np.arange(1, K + 1)  # paper indexes devices from 1
+    odd = (k_idx % 2) == 1
+    c = np.where(odd, 5.0, 10.0)
+    q = np.where(odd, 0.002, 0.005)
+    eps = np.where(odd, 0.2, 0.8)
+    f = (0.1 + 0.1 * ((k_idx - 1) % 10)) * 1e9
+    return SystemParams(
+        K=K, N=N, Q=Q,
+        B=jnp.asarray(2e6), T=jnp.asarray(0.5), L=jnp.asarray(L_bits),
+        N0=jnp.asarray(1e-9), p_max=jnp.full((K,), 10.0),
+        q=jnp.asarray(q, jnp.float32), c=jnp.asarray(c, jnp.float32),
+        f=jnp.asarray(f, jnp.float32),
+        F=jnp.full((K,), 20.0), kappa=jnp.asarray(1e-28),
+        eps=jnp.asarray(eps, jnp.float32),
+        D_hat=jnp.full((K,), float(D_hat)),
+        lam=jnp.asarray(lam),
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RoundState:
+    """Per-round randomness: channel gains, availability, sigma scores."""
+
+    h: Array  # (K, N) channel power gains
+    alpha: Array  # (K,) availability indicators in {0, 1}
+    sigma: Array  # (K, max_Dhat) per-sample ||g_{k,j}||^2 scores
+    sigma_mask: Array  # (K, max_Dhat) 1 where a sample exists
+
+
+def sample_round(key: jax.Array, sys: SystemParams,
+                 mean_gain: float = 1e-5,
+                 sigma: Optional[Array] = None) -> RoundState:
+    """Draw the paper's round randomness.
+
+    Channel gains h_{k,n} ~ Exp(mean 1e-5); alpha_k ~ Bernoulli(eps_k).
+    ``sigma`` may be supplied by the training loop (real gradient norms);
+    otherwise a placeholder lognormal draw is used (unit tests, benches).
+    """
+    kh, ka, ks = jax.random.split(key, 3)
+    h = jax.random.exponential(kh, (sys.K, sys.N)) * mean_gain
+    alpha = (jax.random.uniform(ka, (sys.K,)) < sys.eps).astype(jnp.float32)
+    max_d = int(np.max(np.asarray(sys.D_hat)))
+    if sigma is None:
+        sigma = jnp.exp(jax.random.normal(ks, (sys.K, max_d)) * 0.5)
+    mask = (jnp.arange(max_d)[None, :]
+            < sys.D_hat.astype(jnp.int32)[:, None]).astype(jnp.float32)
+    return RoundState(h=h, alpha=alpha, sigma=sigma * mask, sigma_mask=mask)

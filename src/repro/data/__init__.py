@@ -1,0 +1,6 @@
+from .synthetic import SyntheticImages, synthetic_lm_batch
+from .mislabel import mislabel
+from .federated import FederatedDataset, non_iid_split
+
+__all__ = ["SyntheticImages", "synthetic_lm_batch", "mislabel",
+           "FederatedDataset", "non_iid_split"]

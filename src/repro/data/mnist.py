@@ -1,0 +1,79 @@
+"""Real MNIST/Fashion-MNIST loader (IDX format) with synthetic fallback.
+
+The container is offline; if the standard IDX files exist under
+``root`` (train-images-idx3-ubyte[.gz] etc.) they are parsed directly
+(no torchvision/tf dependency), otherwise the synthetic generator with
+identical shapes/statistics is returned so every experiment still runs.
+"""
+from __future__ import annotations
+
+import gzip
+import os
+import struct
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .synthetic import SyntheticImages
+
+_FILES = {
+    "train_images": "train-images-idx3-ubyte",
+    "train_labels": "train-labels-idx1-ubyte",
+    "test_images": "t10k-images-idx3-ubyte",
+    "test_labels": "t10k-labels-idx1-ubyte",
+}
+
+
+def _open(path: str):
+    if os.path.exists(path + ".gz"):
+        return gzip.open(path + ".gz", "rb")
+    return open(path, "rb")
+
+
+def _read_idx(path: str) -> np.ndarray:
+    with _open(path) as f:
+        magic = struct.unpack(">I", f.read(4))[0]
+        ndim = magic & 0xFF
+        dims = struct.unpack(f">{ndim}I", f.read(4 * ndim))
+        data = np.frombuffer(f.read(), dtype=np.uint8)
+    return data.reshape(dims)
+
+
+def available(root: str) -> bool:
+    return all(os.path.exists(os.path.join(root, f))
+               or os.path.exists(os.path.join(root, f + ".gz"))
+               for f in _FILES.values())
+
+
+def load_mnist(root: str = "data/mnist",
+               fallback_n: Tuple[int, int] = (60000, 10000),
+               fallback_side: int = 28,
+               seed: int = 0) -> Tuple[SyntheticImages, SyntheticImages]:
+    """Returns (train, test) as SyntheticImages containers.
+
+    Uses the real IDX files when present; otherwise the synthetic
+    class-conditional generator (documented fallback, DESIGN.md §7).
+    """
+    if available(root):
+        tr_x = _read_idx(os.path.join(root,
+                                      _FILES["train_images"])).astype(
+            np.float32) / 255.0
+        tr_y = _read_idx(os.path.join(root,
+                                      _FILES["train_labels"])).astype(
+            np.int32)
+        te_x = _read_idx(os.path.join(root,
+                                      _FILES["test_images"])).astype(
+            np.float32) / 255.0
+        te_y = _read_idx(os.path.join(root,
+                                      _FILES["test_labels"])).astype(
+            np.int32)
+        train = SyntheticImages(images=tr_x, labels=tr_y.copy(),
+                                true_labels=tr_y, num_classes=10)
+        test = SyntheticImages(images=te_x, labels=te_y.copy(),
+                               true_labels=te_y, num_classes=10)
+        return train, test
+    train = SyntheticImages.make(fallback_n[0], side=fallback_side,
+                                 seed=seed)
+    test = SyntheticImages.make(fallback_n[1], side=fallback_side,
+                                seed=seed + 1)
+    return train, test

@@ -1,0 +1,6 @@
+from .client import local_gradient, per_sample_sigma
+from .server import aggregate_gradients
+from .rounds import FEELConfig, FEELTrainer, RoundMetrics
+
+__all__ = ["local_gradient", "per_sample_sigma", "aggregate_gradients",
+           "FEELConfig", "FEELTrainer", "RoundMetrics"]

@@ -1,0 +1,64 @@
+"""Device-side computation (paper §II-B).
+
+* ``per_sample_sigma`` — sigma_{k,j} = ||g_{k,j}||^2 for every sample of
+  the sampled sub-dataset D̂_k.  Two modes:
+    - "full": vmap(grad) over samples — the literal paper quantity;
+    - "last_layer": exact gradient-norm of the *output layer only*:
+      for a linear head  logits = h W + b  with CE loss,
+        dL/dW_j = h_j^T (p_j - y_j),  dL/db_j = (p_j - y_j)
+      so ||g_j||^2 = ||p_j - y_j||^2 * (||h_j||^2 + 1).
+      O(batch * d) instead of O(batch * |params|); this is the scorer
+      the large-model path uses (see kernels/gradnorm for the fused
+      TPU version).
+* ``local_gradient`` — eq. (4): gradient of the loss averaged over the
+  *selected* subset M_k (selection mask delta).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def per_sample_sigma(params, images: Array, labels: Array,
+                     features_fn: Callable, method: str = "last_layer",
+                     loss_fn: Callable | None = None) -> Array:
+    """sigma for each sample: (B,)."""
+    if method == "last_layer":
+        h, logits = features_fn(params, images)
+        p = jax.nn.softmax(logits)
+        y = jax.nn.one_hot(labels, logits.shape[-1], dtype=p.dtype)
+        d = p - y
+        return jnp.sum(d * d, axis=-1) * (jnp.sum(h * h, axis=-1) + 1.0)
+    if method == "full":
+        assert loss_fn is not None
+
+        def one(img, lab):
+            g = jax.grad(loss_fn)(params, img[None], lab[None])
+            return sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(g))
+
+        return jax.vmap(one)(images, labels)
+    raise ValueError(f"unknown sigma method: {method}")
+
+
+def local_gradient(params, images: Array, labels: Array, delta: Array,
+                   loss_fn: Callable):
+    """eq. (4): grad of (sum_j delta_j l_j) / (sum_j delta_j)."""
+
+    def weighted_loss(p):
+        logits_loss = _per_sample_loss(p, images, labels, loss_fn)
+        return (jnp.sum(delta * logits_loss)
+                / jnp.maximum(jnp.sum(delta), 1e-9))
+
+    return jax.grad(weighted_loss)(params)
+
+
+def _per_sample_loss(params, images, labels, loss_fn):
+    """Vectorized per-sample losses via a batched loss_fn contract:
+    loss_fn(params, images, labels) returns the mean loss, so we call
+    it per sample through vmap."""
+    return jax.vmap(lambda img, lab: loss_fn(params, img[None],
+                                             lab[None]))(images, labels)

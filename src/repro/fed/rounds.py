@@ -1,0 +1,212 @@
+"""The FEEL communication-round loop (paper §II + Algorithm 1).
+
+Each round:
+  1. every device samples |D̂_k| local samples and scores them
+     (sigma_{k,j} = per-sample gradient-norm^2);
+  2. channels h_{k,n} and availability alpha_k are drawn;
+  3. the server runs Algorithm 1 (or a baseline scheme) to fix
+     (rho*, p*, delta*) and is billed the net cost (eq. 18);
+  4. devices compute local gradients on their *selected* samples
+     (eq. 4) — FedSGD; with ``local_steps > 1`` the FedAvg variant of
+     footnote 4 runs multiple local steps and uploads model deltas;
+  5. the server aggregates with inverse-propensity weights (eq. 19)
+     and applies the optimizer update (eq. 20; Adam in §VI-A).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import optim
+from ..core import joint as joint_mod
+from ..core.types import RoundState, SystemParams
+from ..data.federated import FederatedDataset
+from . import client as client_mod
+from . import server as server_mod
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class FEELConfig:
+    scheme: str = "proposed"          # proposed | baseline1..baseline4
+    selection_method: str = "faithful"  # faithful (Alg 4+5) | exact
+    sigma_method: str = "last_layer"    # last_layer | full
+    power_evaluator: str = "closed_form"  # closed_form | ccp
+    optimizer: str = "adam"
+    lr: float = 1e-3
+    d_hat: int = 200
+    local_steps: int = 1              # >1 => FedAvg variant
+    gp_steps: int = 400
+    gp_step0: float = 0.3
+    warmup_rounds: int = 0    # select ALL samples first (beyond-paper fix:
+                              # sigma is uninformative before the model fits)
+    eval_every: int = 10
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class RoundMetrics:
+    round: int
+    net_cost: float
+    cum_net_cost: float
+    delta_obj: float
+    n_selected: int
+    n_uploaded: int
+    frac_mislabeled_selected: float
+    test_acc: Optional[float] = None
+
+
+class FEELTrainer:
+    """Drives FEEL rounds for an image-classification model."""
+
+    def __init__(self, sys: SystemParams, data: FederatedDataset,
+                 model, params, cfg: FEELConfig):
+        """``model`` exposes features(params, x), apply, loss_fn, accuracy."""
+        self.sys = sys
+        self.data = data
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self.key = jax.random.PRNGKey(cfg.seed)
+        opt_builder = {"adam": optim.adam, "sgd": optim.sgd,
+                       "momentum": optim.momentum,
+                       "adafactor": optim.adafactor}[cfg.optimizer]
+        self.opt = opt_builder(cfg.lr)
+        self.opt_state = self.opt.init(params)
+        self._build_jitted()
+
+    # ------------------------------------------------------------------
+    def _build_jitted(self):
+        model, cfg = self.model, self.cfg
+
+        @jax.jit
+        def sigma_all(params, images, labels):
+            """(K, D̂) sigma scores."""
+            f = functools.partial(client_mod.per_sample_sigma,
+                                  features_fn=model.features,
+                                  method=cfg.sigma_method,
+                                  loss_fn=model.loss_fn)
+            return jax.vmap(lambda im, lb: f(params, im, lb))(images, labels)
+
+        @jax.jit
+        def local_grads(params, images, labels, delta):
+            """pytree with leading K axis (FedSGD local gradients)."""
+            return jax.vmap(
+                lambda im, lb, dl: client_mod.local_gradient(
+                    params, im, lb, dl, model.loss_fn))(images, labels,
+                                                        delta)
+
+        @jax.jit
+        def local_deltas(params, images, labels, delta, lr):
+            """FedAvg: run local_steps SGD steps, return param deltas."""
+
+            def one_device(im, lb, dl):
+                def step(p, _):
+                    g = client_mod.local_gradient(p, im, lb, dl,
+                                                  model.loss_fn)
+                    p = jax.tree.map(lambda a, b: a - lr * b, p, g)
+                    return p, None
+
+                p_out, _ = jax.lax.scan(step, params, None,
+                                        length=cfg.local_steps)
+                # pseudo-gradient: (w - w_k') / lr, aggregated like a grad
+                return jax.tree.map(lambda a, b: (a - b) / lr, params, p_out)
+
+            return jax.vmap(one_device)(images, labels, delta)
+
+        self._sigma_all = sigma_all
+        self._local_grads = local_grads
+        self._local_deltas = local_deltas
+
+    # ------------------------------------------------------------------
+    def _gather_round_batches(self):
+        idx = self.data.sample_subsets(self.rng, self.cfg.d_hat)
+        imgs = np.stack([self.data.device_images[k][idx[k]]
+                         for k in range(self.sys.K)])
+        labels = np.stack([self.data.device_labels[k][idx[k]]
+                           for k in range(self.sys.K)])
+        true = np.stack([self.data.device_true[k][idx[k]]
+                         for k in range(self.sys.K)])
+        return jnp.asarray(imgs), jnp.asarray(labels), true
+
+
+    def run_round(self, i: int, eval_now: bool = False) -> RoundMetrics:
+        sys, cfg = self.sys, self.cfg
+        images, labels, true = self._gather_round_batches()
+        self.key, kh, ka, kb = jax.random.split(self.key, 4)
+
+        sigma = self._sigma_all(self.params, images, labels)
+        h = jax.random.exponential(kh, (sys.K, sys.N)) * 1e-5
+        alpha = (jax.random.uniform(ka, (sys.K,)) < sys.eps
+                 ).astype(jnp.float32)
+        mask = jnp.ones_like(sigma)
+        state = RoundState(h=h, alpha=alpha, sigma=sigma, sigma_mask=mask)
+
+        if cfg.scheme == "proposed" and i < cfg.warmup_rounds:
+            # warmup: resource allocation as proposed, selection = all
+            match = joint_mod.matching_mod.swap_matching(
+                sys, state.h, state.alpha,
+                evaluator=cfg.power_evaluator)
+            dec = joint_mod._finish(sys, match.rho, match.p,
+                                    np.asarray(mask), state,
+                                    feasible=match.feasible,
+                                    swaps=match.swaps)
+        elif cfg.scheme == "proposed":
+            dec = joint_mod.proposed_scheme(
+                sys, state, selection_method=cfg.selection_method,
+                power_evaluator=cfg.power_evaluator, gp_steps=cfg.gp_steps,
+                gp_step0=cfg.gp_step0)
+        elif cfg.scheme.startswith("baseline"):
+            dec = joint_mod.baseline_scheme(sys, state,
+                                            int(cfg.scheme[-1]), key=kb)
+        else:
+            raise ValueError(cfg.scheme)
+
+        delta = jnp.asarray(dec.delta)
+        matched = jnp.asarray(dec.rho.sum(axis=1) > 0, jnp.float32)
+        uploaded = alpha * matched
+
+        if cfg.local_steps > 1:
+            grads = self._local_deltas(self.params, images, labels, delta,
+                                       jnp.asarray(cfg.lr))
+        else:
+            grads = self._local_grads(self.params, images, labels, delta)
+        g_hat = server_mod.aggregate_gradients(sys, grads, uploaded)
+
+        updates, self.opt_state = self.opt.update(g_hat, self.opt_state,
+                                                  self.params)
+        self.params = optim.apply_updates(self.params, updates)
+
+        sel = np.asarray(delta) > 0.5
+        mislabeled = (np.asarray(labels) != true)
+        frac_bad = (float(np.sum(sel & mislabeled)) / max(np.sum(sel), 1))
+        acc = None
+        if eval_now:
+            acc = self.model.accuracy(self.params, self.data.test_images,
+                                      self.data.test_labels)
+        self._cum = getattr(self, "_cum", 0.0) + dec.net_cost
+        return RoundMetrics(round=i, net_cost=dec.net_cost,
+                            cum_net_cost=self._cum,
+                            delta_obj=dec.delta_obj,
+                            n_selected=int(np.sum(sel)),
+                            n_uploaded=int(np.sum(np.asarray(uploaded))),
+                            frac_mislabeled_selected=frac_bad, test_acc=acc)
+
+    def run(self, rounds: int, verbose: bool = False) -> List[RoundMetrics]:
+        out = []
+        for i in range(rounds):
+            eval_now = (i % self.cfg.eval_every == 0) or i == rounds - 1
+            m = self.run_round(i, eval_now=eval_now)
+            out.append(m)
+            if verbose and eval_now:
+                print(f"round {i:4d} acc={m.test_acc} "
+                      f"cum_cost={m.cum_net_cost:.4f} sel={m.n_selected} "
+                      f"bad_frac={m.frac_mislabeled_selected:.3f}")
+        return out

@@ -1,0 +1,24 @@
+"""Server-side aggregation (paper §II-D).
+
+eq. (19): g_hat = (1/|D̂|) sum_k (|D̂_k|/eps_k) * alpha_k * g_k.
+Lemma 1: unbiased under alpha_k ~ Bernoulli(eps_k) (tested in
+tests/test_fed.py by Monte-Carlo).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.types import SystemParams
+
+Array = jax.Array
+
+
+def aggregate_gradients(sys: SystemParams, local_grads, alpha: Array):
+    """``local_grads``: pytree with a leading K axis on every leaf."""
+    w = (sys.D_hat / sys.eps) * alpha / sys.D_hat_total  # (K,)
+
+    def agg(leaf):
+        return jnp.tensordot(w.astype(leaf.dtype), leaf, axes=(0, 0))
+
+    return jax.tree.map(agg, local_grads)

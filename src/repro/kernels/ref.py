@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True,
+                        scale: float | None = None) -> jax.Array:
+    """q, k, v: (BH, S, d)."""
+    d = q.shape[-1]
+    scale = d ** -0.5 if scale is None else scale
+    logits = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        S = q.shape[1]
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        logits = jnp.where(mask[None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rownorm2_ref(x: jax.Array) -> jax.Array:
+    return jnp.sum(jnp.square(x.astype(jnp.float32)), axis=-1)
+
+
+def gradnorm_sigma_ref(h: jax.Array, dlogits: jax.Array) -> jax.Array:
+    return (rownorm2_ref(h) + 1.0) * rownorm2_ref(dlogits)
+
+
+def lru_scan_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Sequential-definition oracle: h_t = a_t h_{t-1} + b_t."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    _, h = jax.lax.scan(step, jnp.zeros_like(a[:, 0]),
+                        (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0)))
+    return jnp.moveaxis(h, 0, 1)

@@ -1,0 +1,11 @@
+"""Distribution & launch layer.
+
+NOTE: ``dryrun`` must be imported/run as the entry module
+(``python -m repro.launch.dryrun``) so its XLA_FLAGS line executes
+before jax initializes devices; do not import it from here.
+"""
+from .mesh import (data_axes, data_size, make_host_mesh,
+                   make_production_mesh, model_size)
+
+__all__ = ["make_production_mesh", "make_host_mesh", "data_axes",
+           "data_size", "model_size"]

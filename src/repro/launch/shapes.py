@@ -1,0 +1,136 @@
+"""Assigned input shapes and abstract input specs (ShapeDtypeStruct,
+no allocation) for every (architecture x shape) dry-run combination."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import optim
+from ..configs import get_config
+from ..models import (FeelIntegration, init_model, make_cache,
+                      make_decode_step, make_prefill_step, make_train_step)
+from ..models.config import ArchConfig
+from . import mesh as mesh_mod
+from . import sharding as sh
+
+SHAPES: Dict[str, dict] = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+# long_500k needs sub-quadratic context handling (DESIGN.md §3):
+LONG_OK = {"falcon-mamba-7b", "recurrentgemma-9b", "gemma3-12b"}
+
+
+def applicable(arch: str, shape: str) -> bool:
+    if shape == "long_500k":
+        return arch in LONG_OK
+    return True
+
+
+def make_optimizer(cfg: ArchConfig):
+    builder = {"adamw": functools.partial(optim.adamw, weight_decay=0.01),
+               "adam": optim.adam, "adafactor": optim.adafactor,
+               "sgd": optim.sgd, "momentum": optim.momentum}[cfg.optimizer]
+    return builder(cfg.learning_rate)
+
+
+def _abstract_batch(cfg: ArchConfig, kind: str, B: int, S: int,
+                    n_clients: int, feel: bool) -> Dict[str, Any]:
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if kind in ("train", "prefill"):
+        if cfg.modality == "text":
+            b = {"tokens": sds((B, S), i32)}
+        elif cfg.modality == "vlm":
+            b = {"embeds": sds((B, S, cfg.d_model), cfg.act_dtype),
+                 "positions": sds((B, 3, S), i32)}
+        else:
+            b = {"tokens": sds((B, cfg.n_codebooks, S), i32)}
+        if kind == "train":
+            lab_shape = ((B, cfg.n_codebooks, S)
+                         if cfg.modality == "audio" else (B, S))
+            b["labels"] = sds(lab_shape, i32)
+            if feel:
+                b["alpha"] = sds((n_clients,), jnp.float32)
+        return b
+    # decode: one token
+    if cfg.modality == "text":
+        b = {"tokens": sds((B, 1), i32)}
+    elif cfg.modality == "vlm":
+        b = {"embeds": sds((B, 1, cfg.d_model), cfg.act_dtype),
+             "positions": sds((B, 3, 1), i32)}
+    else:
+        b = {"tokens": sds((B, cfg.n_codebooks, 1), i32)}
+    b["cache_index"] = sds((), i32)
+    return b
+
+
+@dataclasses.dataclass
+class DryRunSpec:
+    """Everything needed to lower one (arch x shape) on a mesh."""
+    arch: str
+    shape: str
+    kind: str
+    step_fn: Any          # the function to jit
+    args: Tuple[Any, ...]  # abstract args with shardings attached
+    cfg: ArchConfig
+    n_devices: int
+
+
+def build_spec(arch: str, shape: str, mesh, *, feel: bool = True,
+               mla_absorbed: bool = False, scan_unroll: int = 1,
+               cfg_overrides: Optional[dict] = None,
+               strategy: str = "tp") -> DryRunSpec:
+    import dataclasses as _dc
+    cfg = _dc.replace(get_config(arch), scan_unroll=scan_unroll,
+                      **(cfg_overrides or {}))
+    info = SHAPES[shape]
+    kind, S, B = info["kind"], info["seq"], info["batch"]
+    n_clients = mesh_mod.data_size(mesh)
+
+    params_abs = jax.eval_shape(lambda k: init_model(k, cfg),
+                                jax.random.PRNGKey(0))
+    p_shard = sh.param_shardings(mesh, params_abs, cfg)
+    params_in = jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        params_abs, p_shard)
+
+    batch_abs = _abstract_batch(cfg, kind, B, S, n_clients, feel)
+    b_shard = sh.batch_shardings(mesh, batch_abs, strategy=strategy)
+    batch_in = jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        batch_abs, b_shard)
+
+    if kind == "train":
+        opt = make_optimizer(cfg)
+        feel_cfg = (FeelIntegration(n_clients=n_clients)
+                    if feel else None)
+        step = make_train_step(cfg, opt, feel=feel_cfg)
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        o_shard = sh.param_shardings(mesh, opt_abs, cfg)
+        opt_in = jax.tree.map(
+            lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+            opt_abs, o_shard)
+        args = (params_in, opt_in, batch_in)
+    elif kind == "prefill":
+        step = make_prefill_step(cfg)
+        args = (params_in, batch_in)
+    else:
+        step = make_decode_step(cfg, mla_absorbed=mla_absorbed)
+        cache_abs = jax.eval_shape(
+            lambda: make_cache(cfg, B, S, dtype=cfg.act_dtype))
+        c_shard = sh.cache_shardings(mesh, cache_abs, B)
+        cache_in = jax.tree.map(
+            lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+            cache_abs, c_shard)
+        args = (params_in, cache_in, batch_in)
+
+    return DryRunSpec(arch=arch, shape=shape, kind=kind, step_fn=step,
+                      args=args, cfg=cfg, n_devices=mesh.size)

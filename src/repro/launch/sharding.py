@@ -1,0 +1,244 @@
+"""Sharding rules: parameters, optimizer state, caches, batches,
+and the activation constrainer installed around jitted steps.
+
+Heuristic (DESIGN.md §5): for every array leaf
+  * the largest dim divisible by the mesh "model" size shards over
+    "model" (ties -> the later dim, i.e. the output features);
+  * the largest *remaining* dim divisible by the total data size
+    shards over the data axes (ZeRO/FSDP-style weight sharding, which
+    is what lets the 236B/671B optimizer state fit HBM);
+  * leading scan-stack dims (decoder "body") and dims < 128 never
+    shard.
+MoE expert tensors (E, d, f) are special-cased to expert parallelism:
+E over (data x model) jointly when divisible (1 expert/chip — §Perf
+pair B iter 2), else E -> "model" with the per-expert features ZeRO'd
+over data.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ArchConfig
+from ..models.shard_ctx import use_constrainer
+from . import mesh as mesh_mod
+
+_MIN_SHARD_DIM = 128
+
+# §Perf pair B iteration 2: joint (data x model) expert sharding.
+# True = optimized default; set False to reproduce the pre-B2 baseline
+# (E over model only, per-expert features ZeRO'd over data).
+EXPERT_JOINT = True
+
+# megatron pairing: these weights contract over their model-sharded dim
+# (row-parallel -> one all-reduce of the block output over "model");
+# everything else shards its OUT-features (column-parallel).
+_ROW_PARALLEL = {"wo", "w_down", "out_proj", "w_out", "w_o"}
+
+
+def _param_spec(name: str, shape, *, model: int, data: int, data_ax,
+                skip_leading: bool, is_expert: bool) -> P:
+    nd = len(shape)
+    spec: list = [None] * nd
+    start = 1 if (skip_leading and nd >= 3) else 0
+    if nd - start < 2:
+        return P(*spec)  # norms/biases: replicate
+
+    if is_expert:
+        # expert parallelism.  Preferred: E over data+model jointly
+        # (1 expert/chip for E=256) — keeps every per-expert matmul
+        # contraction unsharded, so no partial-sum all-reduces of the
+        # (E, C, d) dispatch tensors (measured 4.1 TB/step when the
+        # per-expert f dim was data-sharded; §Perf pair B).
+        e_dim = start
+        joint = data * model
+        if EXPERT_JOINT and shape[e_dim] % joint == 0:
+            spec[e_dim] = tuple(data_ax) + ("model",)
+            return P(*spec)
+        # fallback (E=160): E over model, ZeRO f over data
+        if shape[e_dim] % model == 0:
+            spec[e_dim] = "model"
+        last = nd - 1
+        if shape[last] % data == 0 and shape[last] >= _MIN_SHARD_DIM:
+            spec[last] = data_ax
+        return P(*spec)
+
+    if name == "embed":
+        # vocab-parallel table: the lookup is a gather, and a joint-
+        # sharded feature dim forces SPMD into full rematerialization.
+        v_dim = nd - 2  # (V, d) or (C, V, d)
+        if shape[v_dim] % model == 0 and shape[v_dim] >= model:
+            spec[v_dim] = "model"
+        if shape[nd - 1] % data == 0 and shape[nd - 1] >= _MIN_SHARD_DIM:
+            spec[nd - 1] = data_ax
+        return P(*spec)
+
+    m_dim = start if name in _ROW_PARALLEL else nd - 1
+    if shape[m_dim] % model == 0 and shape[m_dim] >= model:
+        spec[m_dim] = "model"
+    # ZeRO data-sharding ONLY on non-contraction dims: row-parallel
+    # weights contract over m_dim, so their output dim can carry the
+    # data axes (XLA gathers the weight over data — cheap).  Column-
+    # parallel weights contract over dim0; data-sharding it makes XLA
+    # all-reduce activations over data (measured 75 GB/step on
+    # llama3.2-3b), and joint (data+model) feature sharding makes SPMD
+    # replicate the batch (measured 8x FLOPs) — both rejected, see
+    # EXPERIMENTS.md §Perf iteration log.
+    if name in _ROW_PARALLEL:
+        out_dim = nd - 1
+        if spec[out_dim] is None and shape[out_dim] % data == 0 \
+                and shape[out_dim] >= _MIN_SHARD_DIM:
+            spec[out_dim] = data_ax
+    return P(*spec)
+
+
+def param_shardings(mesh: Mesh, abstract_params: Any,
+                    cfg: Optional[ArchConfig] = None) -> Any:
+    """NamedSharding tree matching an eval_shape'd param tree."""
+    model = mesh_mod.model_size(mesh)
+    data = mesh_mod.data_size(mesh)
+    data_ax = mesh_mod.data_axes(mesh)
+    n_exp = cfg.n_experts if cfg is not None else 0
+
+    def one(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        pstr = "/".join(keys)
+        name = keys[-1] if keys else ""
+        under_body = "body" in pstr
+        is_expert = (n_exp > 0 and leaf.ndim >= 3 and "shared" not in pstr
+                     and n_exp in leaf.shape
+                     and name in ("w_gate", "w_up", "w_down"))
+        spec = _param_spec(name, leaf.shape, model=model, data=data,
+                           data_ax=data_ax, skip_leading=under_body,
+                           is_expert=is_expert)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, abstract_params)
+
+
+def cache_shardings(mesh: Mesh, abstract_cache: Any, batch: int) -> Any:
+    """KV/state caches: batch dim over data axes when divisible; else
+    the sequence dim (long_500k); heads/latent dims over model when
+    divisible."""
+    model = mesh_mod.model_size(mesh)
+    data = mesh_mod.data_size(mesh)
+    data_ax = mesh_mod.data_axes(mesh)
+
+    def one(path, leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        skip = nd >= 3 and "body" in "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        start = 1 if skip else 0
+        spec: list = [None] * nd
+        b_dim = start  # batch is always the first real dim
+        rest = list(range(start + 1, nd))
+        if shape[b_dim] % data == 0 and shape[b_dim] >= data:
+            spec[b_dim] = data_ax
+        elif rest and shape[rest[0]] % data == 0 \
+                and shape[rest[0]] >= _MIN_SHARD_DIM:
+            spec[rest[0]] = data_ax  # sequence-sharded cache
+            rest = rest[1:]
+        cand = [d for d in rest if shape[d] % model == 0
+                and shape[d] >= model]
+        if cand:
+            spec[max(cand, key=lambda d: (shape[d], d))] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, abstract_cache)
+
+
+def batch_shardings(mesh: Mesh, abstract_batch: Any,
+                    strategy: str = "tp") -> Any:
+    """strategy "tp": batch over the data axes (megatron hybrid).
+    strategy "fsdp": batch over data+model jointly — every chip is a
+    data shard; weights stay model-sharded and XLA all-gathers them
+    per use (ZeRO-3 semantics)."""
+    data_ax = mesh_mod.data_axes(mesh)
+    data = mesh_mod.data_size(mesh)
+    model = mesh_mod.model_size(mesh)
+    batch_ax = tuple(data_ax) + (("model",) if strategy == "fsdp" else ())
+    batch_div = data * (model if strategy == "fsdp" else 1)
+
+    def one(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        if leaf.ndim == 0 or name in ("alpha", "cache_index"):
+            return NamedSharding(mesh, P())
+        spec: list = [None] * leaf.ndim
+        if leaf.shape[0] % batch_div == 0 and leaf.shape[0] >= batch_div:
+            spec[0] = batch_ax
+        elif leaf.shape[0] % data == 0 and leaf.shape[0] >= data:
+            spec[0] = data_ax
+        if strategy == "tp" and name == "embeds" \
+                and leaf.shape[-1] % model == 0:
+            spec[-1] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, abstract_batch)
+
+
+# ---------------------------------------------------------- activations
+
+def activation_constrainer(mesh: Mesh, strategy: str = "tp"):
+    """Constrainer for repro.models.shard_ctx logical names."""
+    data_ax = mesh_mod.data_axes(mesh)
+    model = mesh_mod.model_size(mesh)
+    data = mesh_mod.data_size(mesh)
+    if strategy == "fsdp":
+        data_ax = tuple(data_ax) + ("model",)
+        data = data * model
+        # activations carry no feature sharding under FSDP: make the
+        # "divisible by model" checks always fail
+        model = 1 << 62
+
+    def build_spec(name, s):
+        nd = len(s)
+        spec: list = [None] * nd
+        if name == "moe_ecd":
+            # mirror the expert-weight sharding on the dispatch tensors
+            if EXPERT_JOINT and s[0] % (data * model) == 0 \
+                    and model > 1:
+                spec[0] = tuple(data_ax) + ("model",)
+            elif s[0] % model == 0:
+                spec[0] = "model"
+            return spec
+        # batch-leading activations
+        if s[0] % data == 0 and s[0] >= data:
+            spec[0] = data_ax
+        if name == "act_btd":
+            return spec
+        if name in ("act_btf", "logits_btv"):
+            if s[-1] % model == 0 and s[-1] >= model:
+                spec[-1] = "model"
+            return spec
+        if name == "act_bthd" and nd >= 3:
+            if s[-2] % model == 0 and s[-2] >= model:
+                spec[-2] = "model"
+            return spec
+        if name == "kv_cache" and nd >= 3:
+            if spec[0] is None and s[1] % data == 0 \
+                    and s[1] >= _MIN_SHARD_DIM:
+                spec[1] = data_ax  # sequence-sharded cache (long_500k)
+            if s[2] % model == 0 and s[2] >= model:
+                spec[2] = "model"
+            return spec
+        return spec
+
+    def constrain(x, name):
+        if x.ndim < 2:
+            return x
+        spec = build_spec(name, x.shape)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*spec)))
+
+    return constrain
+
+
+def with_mesh_constraints(mesh: Mesh, strategy: str = "tp"):
+    """Context manager installing the activation constrainer."""
+    return use_constrainer(activation_constrainer(mesh, strategy))

@@ -1,0 +1,9 @@
+from . import cnn  # paper-scale CNN (§VI-A)
+from .config import ArchConfig
+from .model import (FeelIntegration, init_model, make_cache,
+                    make_decode_step, make_forward, make_prefill_step,
+                    make_train_step, param_count)
+
+__all__ = ["ArchConfig", "cnn", "init_model", "make_cache",
+           "make_decode_step", "make_forward", "make_prefill_step",
+           "make_train_step", "param_count", "FeelIntegration"]

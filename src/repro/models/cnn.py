@@ -1,0 +1,95 @@
+"""The paper's CNN (§VI-A): two 5x5 conv layers (10, 20 channels), each
+followed by 2x2 max-pooling, then three fully-connected ReLU layers.
+
+Pure-functional: ``init`` builds a params pytree, ``apply`` maps
+(params, images) -> logits, ``features`` additionally returns the
+penultimate activations (used by the exact last-layer sigma scorer).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    side: int = 28
+    num_classes: int = 10
+    conv_channels: Tuple[int, int] = (10, 20)
+    fc_dims: Tuple[int, int] = (120, 84)
+
+    @property
+    def feature_dim(self) -> int:
+        s = self.side // 4  # two 2x2 pools
+        return s * s * self.conv_channels[1]
+
+
+def init(key: Array, cfg: CNNConfig) -> dict:
+    k = jax.random.split(key, 5)
+    c1, c2 = cfg.conv_channels
+    f1, f2 = cfg.fc_dims
+    he = jax.nn.initializers.he_normal()
+    return {
+        "conv1": {"w": he(k[0], (5, 5, 1, c1), jnp.float32),
+                  "b": jnp.zeros((c1,))},
+        "conv2": {"w": he(k[1], (5, 5, c1, c2), jnp.float32),
+                  "b": jnp.zeros((c2,))},
+        "fc1": {"w": he(k[2], (cfg.feature_dim, f1), jnp.float32),
+                "b": jnp.zeros((f1,))},
+        "fc2": {"w": he(k[3], (f1, f2), jnp.float32), "b": jnp.zeros((f2,))},
+        "out": {"w": he(k[4], (f2, cfg.num_classes), jnp.float32),
+                "b": jnp.zeros((cfg.num_classes,))},
+    }
+
+
+def _conv(x: Array, w: Array, b: Array) -> Array:
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def _pool(x: Array) -> Array:
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def features(params: dict, images: Array) -> Tuple[Array, Array]:
+    """(penultimate features h, logits). images: (B, side, side)."""
+    x = images[..., None]
+    x = _pool(jax.nn.relu(_conv(x, params["conv1"]["w"],
+                                params["conv1"]["b"])))
+    x = _pool(jax.nn.relu(_conv(x, params["conv2"]["w"],
+                                params["conv2"]["b"])))
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    h = jax.nn.relu(x @ params["fc2"]["w"] + params["fc2"]["b"])
+    logits = h @ params["out"]["w"] + params["out"]["b"]
+    return h, logits
+
+
+def apply(params: dict, images: Array) -> Array:
+    return features(params, images)[1]
+
+
+def loss_fn(params: dict, images: Array, labels: Array) -> Array:
+    """Mean cross-entropy."""
+    logits = apply(params, images)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def accuracy(params: dict, images: Array, labels: Array,
+             batch: int = 512) -> float:
+    correct = 0
+    n = images.shape[0]
+    for i in range(0, n, batch):
+        logits = apply(params, images[i:i + batch])
+        correct += int(jnp.sum(jnp.argmax(logits, -1)
+                               == labels[i:i + batch]))
+    return correct / n

@@ -1,0 +1,101 @@
+"""Mixture-of-Experts FFN (DeepSeek-V2/V3 style: shared + routed
+experts, token-choice top-k routing, normalized gates).
+
+TPU adaptation (DESIGN.md §2): dispatch is *capacity-based gather*
+rather than a (tokens x experts x capacity) one-hot einsum — each
+expert takes the top-C tokens that routed to it (priority by gate
+value), giving fixed shapes, MXU-aligned per-expert matmuls, and an
+expert-sharded (E, C, d) working set.  Tokens beyond capacity are
+dropped (standard drop policy; capacity_factor controls slack).
+The expert dim E shards over the mesh "model" axis (expert
+parallelism) — the gather/scatter lower to the all-to-all-like
+collectives the roofline analysis attributes to MoE.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import init_dense, mlp
+from .shard_ctx import constrain
+
+Array = jax.Array
+
+
+def init_moe(key, cfg: ArchConfig, dtype) -> dict:
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / (d ** 0.5)
+    p = {
+        "router": init_dense(ks[0], d, E, jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, d, f), jnp.float32)
+                   * scale).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, d, f), jnp.float32)
+                 * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, f, d), jnp.float32)
+                   * (1.0 / f ** 0.5)).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        from .layers import init_mlp
+        p["shared"] = init_mlp(ks[4], d, cfg.n_shared_experts * f, dtype)
+    return p
+
+
+def capacity(cfg: ArchConfig, n_tokens: int) -> int:
+    c = int(n_tokens * cfg.topk / cfg.n_experts * cfg.capacity_factor)
+    return min(max(8, -(-c // 8) * 8), n_tokens)  # 8-aligned, <= tokens
+
+
+def moe_ffn(cfg: ArchConfig, p: dict, x: Array) -> Tuple[Array, Array]:
+    """x: (B, S, d) -> (y, aux_loss)."""
+    B, S, d = x.shape
+    G = B * S
+    E, K = cfg.n_experts, cfg.topk
+    xf = x.reshape(G, d)
+
+    # matmul in the activation dtype so the (G, d) gradient flowing
+    # back through the router stays bf16 (halves the dispatch-grad
+    # all-reduce, §Perf pair B iter 3); softmax still f32.
+    router_logits = (xf @ p["router"].astype(xf.dtype)
+                     ).astype(jnp.float32)  # (G, E)
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, K)  # (G, K)
+    top_vals = top_vals / jnp.maximum(
+        jnp.sum(top_vals, -1, keepdims=True), 1e-9)  # DeepSeek normalization
+
+    # gate matrix (G, E): gate value where expert chosen, else 0
+    gate_mat = jnp.zeros((G, E), jnp.float32).at[
+        jnp.arange(G)[:, None], top_idx].set(top_vals)
+
+    # ---- expert-side capacity selection (priority = gate value) ----
+    C = capacity(cfg, G)
+    w_ec, idx_ec = jax.lax.top_k(gate_mat.T, C)  # (E, C) over tokens
+    x_ec = jnp.take(xf, idx_ec, axis=0)  # (E, C, d)
+    x_ec = constrain(x_ec, "moe_ecd")
+
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    h = act(jnp.einsum("ecd,edf->ecf", x_ec, p["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", x_ec, p["w_up"])
+    y_ec = jnp.einsum("ecf,efd->ecd", h, p["w_down"])  # (E, C, d)
+    y_ec = constrain(y_ec, "moe_ecd")
+
+    # ---- combine: scatter-add back to tokens, weighted by gates ----
+    # keep the combine in the activation dtype: a f32 combine promotes
+    # the cross-expert all-reduce to f32 and doubles its bytes
+    # (measured 37.6 GB/layer -> see EXPERIMENTS.md §Perf pair B)
+    contrib = (y_ec.astype(x.dtype)
+               * w_ec[..., None].astype(x.dtype)).reshape(E * C, d)
+    yf = jnp.zeros((G, d), x.dtype).at[idx_ec.reshape(-1)].add(
+        contrib, mode="drop")
+
+    if cfg.n_shared_experts:
+        yf = yf + mlp(p["shared"], xf, cfg.act)
+
+    # ---- switch-style load-balance auxiliary loss ----
+    me = jnp.mean(probs, axis=0)                      # router mass / expert
+    ce = jnp.mean(gate_mat > 0, axis=0)               # token fraction / expert
+    aux = cfg.router_aux_weight * E * jnp.sum(me * ce)
+    return yf.reshape(B, S, d), aux

@@ -1,0 +1,98 @@
+"""RG-LRU recurrent mixer (RecurrentGemma / Griffin).
+
+    r_t = sigmoid(W_r x_t)                      (recurrence gate)
+    i_t = sigmoid(W_i x_t)                      (input gate)
+    log a_t = -c * softplus(Lambda) * r_t       (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Diagonal linear recurrence -> associative scan (same TPU adaptation as
+the Mamba mixer).  The block is the Griffin recurrent block: dual
+linear branches, a short causal conv on the recurrent branch, RG-LRU,
+GeLU-gated merge, output projection.
+
+Cache: {"conv": (B, k-1, w), "h": (B, w)}.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import init_dense
+from .shard_ctx import constrain
+
+Array = jax.Array
+
+_C = 8.0
+
+
+def init_rglru(key, cfg: ArchConfig, dtype) -> dict:
+    d, w, k = cfg.d_model, cfg.lru_width_, cfg.ssm_conv or 4
+    ks = jax.random.split(key, 6)
+    # Lambda init so a^c covers (0.9, 0.999) — standard Griffin init
+    u = jax.random.uniform(ks[4], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u ** (1.0 / _C))))
+    return {
+        "w_x": init_dense(ks[0], d, w, dtype),
+        "w_y": init_dense(ks[1], d, w, dtype),
+        "conv_w": (jax.random.normal(ks[2], (k, w), jnp.float32)
+                   * (1.0 / k ** 0.5)).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_r": init_dense(ks[3], w, w, dtype),
+        "w_i": init_dense(ks[5], w, w, dtype),
+        "lam": lam,
+        "w_out": init_dense(jax.random.fold_in(key, 7), w, d, dtype),
+    }
+
+
+def _gates(p: dict, s: Array):
+    r = jax.nn.sigmoid((s @ p["w_r"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((s @ p["w_i"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, mult * i
+
+
+def rglru_mixer(cfg: ArchConfig, p: dict, x: Array, mode: str,
+                cache: Optional[dict]) -> Tuple[Array, Optional[dict]]:
+    B, S, _ = x.shape
+    k = cfg.ssm_conv or 4
+    xs = x @ p["w_x"]
+    gate = jax.nn.gelu((x @ p["w_y"]).astype(jnp.float32))
+    xs = constrain(xs, "act_btf")
+
+    if mode in ("train", "prefill"):
+        pad = jnp.pad(xs, ((0, 0), (k - 1, 0), (0, 0)))
+        conv = sum(pad[:, j:j + S, :] * p["conv_w"][j]
+                   for j in range(k)) + p["conv_b"]
+        a, bx_scale = _gates(p, conv)
+        bx = bx_scale * conv.astype(jnp.float32)
+
+        def combine(u, v):
+            a1, b1 = u
+            a2, b2 = v
+            return a1 * a2, a2 * b1 + b2
+
+        _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+        new_cache = None
+        if mode == "prefill":
+            # last k-1 inputs, zero-left-padded when S < k-1
+            xp = jnp.pad(xs, ((0, 0), (max(k - 1 - S, 0), 0), (0, 0)))
+            new_cache = {"conv": xp[:, xp.shape[1] - (k - 1):, :],
+                         "h": h[:, -1]}
+    else:
+        assert cache is not None
+        conv_buf = jnp.concatenate(
+            [cache["conv"], xs.astype(cache["conv"].dtype)], axis=1)
+        conv = (jnp.einsum("bkw,kw->bw", conv_buf, p["conv_w"])
+                + p["conv_b"])[:, None, :]
+        a, bx_scale = _gates(p, conv)
+        h1 = a[:, 0] * cache["h"] + (bx_scale * conv.astype(jnp.float32))[:, 0]
+        h = h1[:, None, :]
+        new_cache = {"conv": conv_buf[:, 1:, :], "h": h1}
+
+    y = (h * gate).astype(x.dtype) @ p["w_out"]
+    return y, new_cache

@@ -1,0 +1,37 @@
+"""Activation-sharding context.
+
+Models are mesh-agnostic; the launcher installs a constrainer that maps
+logical activation names -> jax.lax.with_sharding_constraint with the
+production mesh.  Default is identity (single-device tests).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Callable
+
+import jax
+
+Array = jax.Array
+
+_constrainer: contextvars.ContextVar[Callable[[Array, str], Array]] = \
+    contextvars.ContextVar("constrainer", default=lambda x, name: x)
+
+
+def constrain(x: Array, name: str) -> Array:
+    """Apply the active sharding constraint for logical name ``name``.
+
+    Names used by the zoo: "act_btd" (batch, seq, d_model),
+    "act_btf" (ffn hidden), "act_bthd" (per-head), "logits_btv",
+    "kv_cache", "moe_ecd" (expert, capacity, d).
+    """
+    return _constrainer.get()(x, name)
+
+
+@contextlib.contextmanager
+def use_constrainer(fn: Callable[[Array, str], Array]):
+    token = _constrainer.set(fn)
+    try:
+        yield
+    finally:
+        _constrainer.reset(token)

@@ -1,0 +1,121 @@
+"""Mamba-1 selective SSM mixer (Falcon-Mamba-7B architecture).
+
+TPU adaptation (DESIGN.md §2): the recurrence
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t
+is diagonal per (channel, state), so train/prefill runs as a log-depth
+``jax.lax.associative_scan`` over the sequence axis instead of a CUDA
+sequential kernel; decode is the single-step recurrence on a carried
+(conv_state, ssm_state).  kernels/lru_scan.py provides the Pallas
+blocked-scan version of the same contraction.
+
+Cache layout: {"conv": (B, k-1, d_inner), "h": (B, d_inner, n)}.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import init_dense
+from .shard_ctx import constrain
+
+Array = jax.Array
+
+
+def init_mamba(key, cfg: ArchConfig, dtype) -> dict:
+    d, di, n = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state
+    dtr, k = cfg.ssm_dt_rank_, cfg.ssm_conv
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj": init_dense(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (k, di), jnp.float32)
+                   * (1.0 / k ** 0.5)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": init_dense(ks[2], di, dtr + 2 * n, dtype),
+        "dt_proj": init_dense(ks[3], dtr, di, dtype),
+        "dt_bias": (jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[4], (di,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1)))))
+                    ).astype(jnp.float32),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": init_dense(ks[5], di, d, dtype),
+    }
+
+
+def _ssm_params(cfg: ArchConfig, p: dict, s: Array):
+    """dt (B,S,di), Bmat (B,S,n), Cmat (B,S,n) from conv output s."""
+    dtr, n = cfg.ssm_dt_rank_, cfg.ssm_state
+    xdb = s @ p["x_proj"]
+    dt_raw, Bmat, Cmat = jnp.split(xdb, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) @
+                         p["dt_proj"].astype(jnp.float32) + p["dt_bias"])
+    return dt, Bmat.astype(jnp.float32), Cmat.astype(jnp.float32)
+
+
+def _scan_assoc(dA: Array, dBx: Array) -> Array:
+    """Associative scan of h_t = dA_t h_{t-1} + dBx_t along axis 1."""
+
+    def combine(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    return h
+
+
+def _causal_conv(p: dict, x: Array, k: int) -> Array:
+    """Depthwise causal conv along seq: x (B, S, di)."""
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # depthwise: sum_j w[j, c] * x[t - (k-1) + j, c]
+    return sum(pad[:, j:j + x.shape[1], :] * p["conv_w"][j]
+               for j in range(k)) + p["conv_b"]
+
+
+def mamba_mixer(cfg: ArchConfig, p: dict, x: Array, mode: str,
+                cache: Optional[dict]) -> Tuple[Array, Optional[dict]]:
+    B, S, _ = x.shape
+    di, n, k = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_conv
+    A = -jnp.exp(p["A_log"])  # (di, n)
+
+    u = x @ p["in_proj"]
+    xs, z = jnp.split(u, 2, axis=-1)
+    xs = constrain(xs, "act_btf")
+
+    if mode in ("train", "prefill"):
+        conv_out = _causal_conv(p, xs, k)
+        s = jax.nn.silu(conv_out)
+        dt, Bmat, Cmat = _ssm_params(cfg, p, s)
+        sf = s.astype(jnp.float32)
+        dA = jnp.exp(dt[..., None] * A)                       # (B,S,di,n)
+        dBx = dt[..., None] * Bmat[:, :, None, :] * sf[..., None]
+        h = _scan_assoc(dA, dBx)                              # (B,S,di,n)
+        y = jnp.einsum("bsdn,bsn->bsd", h, Cmat) + p["D"] * sf
+        new_cache = None
+        if mode == "prefill":
+            # last k-1 inputs, zero-left-padded when S < k-1
+            xp = jnp.pad(xs, ((0, 0), (max(k - 1 - S, 0), 0), (0, 0)))
+            new_cache = {"conv": xp[:, xp.shape[1] - (k - 1):, :],
+                         "h": h[:, -1]}  # (B,di,n)
+    else:
+        assert cache is not None
+        conv_buf = jnp.concatenate(
+            [cache["conv"], xs.astype(cache["conv"].dtype)], axis=1)
+        conv_out = (jnp.einsum("bkd,kd->bd", conv_buf, p["conv_w"])
+                    + p["conv_b"])[:, None, :]
+        s = jax.nn.silu(conv_out)
+        dt, Bmat, Cmat = _ssm_params(cfg, p, s)
+        sf = s.astype(jnp.float32)
+        dA = jnp.exp(dt[:, 0, :, None] * A)                   # (B,di,n)
+        dBx = dt[:, 0, :, None] * Bmat[:, 0, None, :] * sf[:, 0, :, None]
+        h1 = dA * cache["h"] + dBx
+        y = (jnp.einsum("bdn,bn->bd", h1, Cmat[:, 0])
+             + p["D"] * sf[:, 0])[:, None, :]
+        new_cache = {"conv": conv_buf[:, 1:, :], "h": h1}
+
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    return y, new_cache

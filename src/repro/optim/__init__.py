@@ -1,0 +1,19 @@
+"""Minimal optimizer library (no optax in this environment).
+
+GradientTransformation-style API:
+    opt = adam(1e-3)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+from .optimizers import (GradientTransformation, adafactor, adam, adamw,
+                         apply_updates, chain, clip_by_global_norm,
+                         global_norm, momentum, scale_by_schedule, sgd)
+from .schedules import constant_schedule, cosine_schedule, warmup_cosine
+
+__all__ = [
+    "GradientTransformation", "adam", "adamw", "adafactor", "sgd",
+    "momentum", "chain", "clip_by_global_norm", "apply_updates",
+    "global_norm", "scale_by_schedule", "constant_schedule",
+    "cosine_schedule", "warmup_cosine",
+]

@@ -1,0 +1,223 @@
+"""Optimizers as pure pytree transformations.
+
+Implemented: sgd, momentum, adam, adamw, adafactor (factored second
+moment — the only optimizer whose state fits HBM for the 671B MoE
+config), plus chain / clip_by_global_norm / scale_by_schedule
+combinators.  All states are pytrees of arrays so they shard exactly
+like the parameters they track (crucial for the dry-run memory
+analysis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class GradientTransformation:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, Optional[PyTree]],
+                     Tuple[PyTree, PyTree]]
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree: PyTree) -> Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+# ------------------------------------------------------------------ basic
+
+def sgd(lr: float) -> GradientTransformation:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        return jax.tree.map(lambda g: -lr * g, grads), state
+
+    return GradientTransformation(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9,
+             nesterov: bool = False) -> GradientTransformation:
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params=None):
+        new_m = jax.tree.map(lambda m, g: beta * m + g, state, grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m, g: -lr * (beta * m + g),
+                               new_m, grads)
+        else:
+            upd = jax.tree.map(lambda m: -lr * m, new_m)
+        return upd, new_m
+
+    return GradientTransformation(init, update)
+
+
+# ------------------------------------------------------------------- adam
+
+class AdamState(NamedTuple):
+    count: Array
+    mu: PyTree
+    nu: PyTree
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0,
+         state_dtype: Any = jnp.float32) -> GradientTransformation:
+    """Adam / AdamW (decoupled decay when weight_decay > 0)."""
+
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, dtype=state_dtype)
+        return AdamState(count=jnp.zeros((), jnp.int32),
+                         mu=jax.tree.map(z, params),
+                         nu=jax.tree.map(z, params))
+
+    def update(grads, state, params=None):
+        count = state.count + 1
+        cast = lambda g: g.astype(state_dtype)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * cast(g),
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * cast(g) ** 2,
+                          state.nu, grads)
+        bc1 = 1 - b1 ** count.astype(jnp.float32)
+        bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(m, v, p):
+            step = m / bc1 / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and p is not None:
+                step = step + weight_decay * p.astype(state_dtype)
+            return (-lr * step)
+
+        if params is None:
+            updates = jax.tree.map(lambda m, v: upd(m, v, None), mu, nu)
+        else:
+            updates = jax.tree.map(upd, mu, nu, params)
+        return updates, AdamState(count=count, mu=mu, nu=nu)
+
+    return GradientTransformation(init, update)
+
+
+def adamw(lr: float, weight_decay: float = 0.01,
+          **kw) -> GradientTransformation:
+    return adam(lr, weight_decay=weight_decay, **kw)
+
+
+# -------------------------------------------------------------- adafactor
+
+class AdafactorState(NamedTuple):
+    count: Array
+    vr: PyTree  # row second-moment (or full v for <2D leaves)
+    vc: PyTree  # col second-moment (dummy for <2D leaves)
+
+
+def adafactor(lr: float, eps: float = 1e-30, clip_threshold: float = 1.0,
+              decay: float = 0.8) -> GradientTransformation:
+    """Factored second-moment estimator (Shazeer & Stern, 2018).
+
+    State per (.., R, C) matrix is R + C floats instead of R*C — the
+    memory term that lets 100B+ parameter configs fit a v5e pod.
+    Factoring applies to the trailing two dims of >=2-D leaves.
+    """
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def vr_init(p):
+            return (jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p)
+                    else jnp.zeros_like(p, dtype=jnp.float32))
+
+        def vc_init(p):
+            return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                    if _factored(p) else jnp.zeros((), jnp.float32))
+
+        return AdafactorState(count=jnp.zeros((), jnp.int32),
+                              vr=jax.tree.map(vr_init, params),
+                              vc=jax.tree.map(vc_init, params))
+
+    def update(grads, state, params=None):
+        count = state.count + 1
+        beta = 1.0 - (count.astype(jnp.float32)) ** (-decay)
+
+        def upd(g, vr, vc):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(g):
+                new_vr = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+                new_vc = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(new_vr, axis=-1, keepdims=True),
+                                    eps)
+                v_est = (new_vr[..., :, None] * new_vc[..., None, :] /
+                         denom[..., None])
+                step = g / jnp.sqrt(v_est + eps)
+            else:
+                new_vr = beta * vr + (1 - beta) * g2
+                new_vc = vc
+                step = g / jnp.sqrt(new_vr + eps)
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(step * step) + eps)
+            step = step / jnp.maximum(1.0, rms / clip_threshold)
+            return -lr * step, new_vr, new_vc
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_vr = treedef.flatten_up_to(state.vr)
+        flat_vc = treedef.flatten_up_to(state.vc)
+        out = [upd(g, vr, vc) for g, vr, vc in zip(flat_g, flat_vr, flat_vc)]
+        updates = treedef.unflatten([o[0] for o in out])
+        new_vr = treedef.unflatten([o[1] for o in out])
+        new_vc = treedef.unflatten([o[2] for o in out])
+        return updates, AdafactorState(count=count, vr=new_vr, vc=new_vc)
+
+    return GradientTransformation(init, update)
+
+
+# ------------------------------------------------------------ combinators
+
+def chain(*transforms: GradientTransformation) -> GradientTransformation:
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params=None):
+        new_state = []
+        for t, s in zip(transforms, state):
+            grads, s = t.update(grads, s, params)
+            new_state.append(s)
+        return grads, tuple(new_state)
+
+    return GradientTransformation(init, update)
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransformation:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        norm = global_norm(grads)
+        scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+        return jax.tree.map(lambda g: g * scale, grads), state
+
+    return GradientTransformation(init, update)
+
+
+def scale_by_schedule(schedule: Callable[[Array], Array]
+                      ) -> GradientTransformation:
+    def init(params):
+        return jnp.zeros((), jnp.int32)
+
+    def update(grads, state, params=None):
+        scale = schedule(state)
+        return jax.tree.map(lambda g: g * scale, grads), state + 1
+
+    return GradientTransformation(init, update)

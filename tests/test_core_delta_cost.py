@@ -1,0 +1,123 @@
+"""Unit + property tests for the Delta objective and cost model."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import default_system, sample_round
+from repro.core import cost as cost_mod
+from repro.core import delta as delta_mod
+
+
+def make_sys(K=6, N=4, Q=2, D=8):
+    return default_system(K=K, N=N, Q=Q, D_hat=D)
+
+
+def test_delta_simplified_equals_raw():
+    sys_ = make_sys()
+    st_ = sample_round(jax.random.PRNGKey(1), sys_)
+    for seed in range(4):
+        d = (jax.random.uniform(jax.random.PRNGKey(seed),
+                                st_.sigma.shape) > 0.4).astype(jnp.float32)
+        d = jnp.maximum(d, jax.nn.one_hot(0, st_.sigma.shape[1])[None, :])
+        d = d * st_.sigma_mask
+        a = float(delta_mod.delta(sys_, d, st_.sigma))
+        b = float(delta_mod.delta_raw(sys_, d, st_.sigma))
+        assert np.isclose(a, b, rtol=1e-5), (a, b)
+
+
+def test_delta_literal_eq22_bruteforce():
+    """Check the simplified Delta against a literal python transcription
+    of eq. (22) on a tiny instance."""
+    sys_ = make_sys(K=3, N=2, Q=2, D=4)
+    st_ = sample_round(jax.random.PRNGKey(2), sys_)
+    sigma = np.asarray(st_.sigma)
+    D_hat = np.asarray(sys_.D_hat)
+    eps = np.asarray(sys_.eps)
+    sel = {0: [0, 2], 1: [1], 2: [0, 1, 3]}  # M_k index sets
+    dlt = np.zeros_like(sigma)
+    for k, idx in sel.items():
+        dlt[k, idx] = 1.0
+
+    total = 0.0
+    K = sys_.K
+    for k in range(K):
+        own = (D_hat[k] ** 2 / (eps[k] * len(sel[k]))
+               * sum(sigma[k, j] for j in sel[k]))
+        cross = 0.0
+        for t in range(K):
+            if t == k:
+                continue
+            cross += (D_hat[k] * D_hat[t] / len(sel[t])
+                      * sum(sigma[t, j] for j in sel[t]))
+        total += own + cross
+    got = float(delta_mod.delta(sys_, jnp.asarray(dlt), st_.sigma))
+    assert np.isclose(got, total, rtol=1e-5)
+
+
+def test_net_cost_components():
+    sys_ = make_sys()
+    st_ = sample_round(jax.random.PRNGKey(3), sys_)
+    rho = np.zeros((sys_.K, sys_.N), np.float32)
+    rho[0, 0] = 1
+    rho[1, 1] = 1
+    p = np.zeros_like(rho)
+    p[0, 0] = 2.0
+    p[1, 1] = 3.0
+    c = np.asarray(sys_.c)
+    T = float(sys_.T)
+    expect_com = c[0] * 2.0 * T + c[1] * 3.0 * T
+    got_com = float(cost_mod.cost_upload(sys_, jnp.asarray(rho),
+                                         jnp.asarray(p)))
+    assert np.isclose(got_com, expect_com, rtol=1e-6)
+
+    # eq. (9)/(10)
+    kappa, F, D, f = (float(sys_.kappa), np.asarray(sys_.F),
+                      np.asarray(sys_.D_hat), np.asarray(sys_.f))
+    expect_cmp = float(np.sum(c * kappa * F * D * f ** 2))
+    got_cmp = float(cost_mod.cost_compute(sys_))
+    assert np.isclose(got_cmp, expect_cmp, rtol=1e-6)
+
+    n_sel = jnp.asarray(np.full(sys_.K, 3.0))
+    expect_net = got_com + got_cmp - float(np.sum(np.asarray(sys_.q) * 3.0))
+    got_net = float(cost_mod.net_cost(sys_, jnp.asarray(rho), jnp.asarray(p),
+                                      n_sel))
+    assert np.isclose(got_net, expect_net, rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000))
+def test_delta_monotone_in_sigma_scale(seed):
+    """Property: scaling all sigmas up scales Delta linearly."""
+    sys_ = make_sys()
+    st_ = sample_round(jax.random.PRNGKey(seed % 2**31), sys_)
+    d = st_.sigma_mask
+    base = float(delta_mod.delta(sys_, d, st_.sigma))
+    scaled = float(delta_mod.delta(sys_, d, st_.sigma * 3.0))
+    assert np.isclose(scaled, 3.0 * base, rtol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000))
+def test_selecting_smallest_sigma_minimizes_delta(seed):
+    """Property: among fixed-size selections, smallest sigmas win."""
+    sys_ = make_sys(K=3, N=2, Q=2, D=5)
+    st_ = sample_round(jax.random.PRNGKey(seed % 2**31), sys_)
+    J = st_.sigma.shape[1]
+    m = 2
+    best = None
+    for idx in itertools.combinations(range(J), m):
+        d = np.zeros((sys_.K, J), np.float32)
+        d[:, list(idx)] = 1.0
+        val = float(delta_mod.delta(sys_, jnp.asarray(d), st_.sigma))
+        best = val if best is None else min(best, val)
+    # smallest-sigma-per-device selection
+    order = np.argsort(np.asarray(st_.sigma), axis=1)
+    d = np.zeros((sys_.K, J), np.float32)
+    for k in range(sys_.K):
+        d[k, order[k, :m]] = 1.0
+    val = float(delta_mod.delta(sys_, jnp.asarray(d), st_.sigma))
+    assert val <= best + 1e-4 * abs(best)

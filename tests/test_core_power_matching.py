@@ -1,0 +1,200 @@
+"""Tests for the NOMA channel, power allocation (Alg. 3) and matching (Alg. 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import channel, default_system, matching, power, sample_round
+
+
+def make_round(seed=0, K=10, N=5, Q=2):
+    sys_ = default_system(K=K, N=N, Q=Q, D_hat=16)
+    st_ = sample_round(jax.random.PRNGKey(seed), sys_)
+    return sys_, st_
+
+
+# ----------------------------------------------------------------- channel
+
+def test_rate_monotone_in_power_no_interference():
+    sys_, st_ = make_round()
+    rho = np.zeros((sys_.K, sys_.N), np.float32)
+    rho[0, 0] = 1.0
+    p1 = np.zeros_like(rho); p1[0, 0] = 1.0
+    p2 = np.zeros_like(rho); p2[0, 0] = 2.0
+    r1 = float(channel.rate_per_device(sys_, jnp.asarray(rho),
+                                       jnp.asarray(p1), st_.h)[0])
+    r2 = float(channel.rate_per_device(sys_, jnp.asarray(rho),
+                                       jnp.asarray(p2), st_.h)[0])
+    assert r2 > r1 > 0
+
+
+def test_sic_interference_ordering():
+    """Stronger-gain device sees the weaker one as interference, not
+    vice versa (paper's SIC decode order)."""
+    sys_, st_ = make_round(K=2, N=1, Q=2)
+    h = np.array([[1e-5], [2e-5]], np.float32)  # device 1 stronger
+    rho = np.ones((2, 1), np.float32)
+    p = np.ones((2, 1), np.float32)
+    I = channel.interference(jnp.asarray(rho), jnp.asarray(p),
+                             jnp.asarray(h), sys_.N0)
+    N0 = float(sys_.N0)
+    assert np.isclose(float(I[0, 0]), N0, rtol=1e-6)          # weak: clean
+    assert np.isclose(float(I[1, 0]), N0 + 1e-5, rtol=1e-5)   # strong: hit
+
+
+# ------------------------------------------------------------------- power
+
+def test_closed_form_hits_rate_targets_exactly():
+    sys_, st_ = make_round(seed=4)
+    res = matching.swap_matching(sys_, st_.h, st_.alpha)
+    p, feas = power.closed_form_power(sys_, jnp.asarray(res.rho), st_.h,
+                                      st_.alpha)
+    assert bool(jnp.all(feas))
+    rates = channel.rate_per_device(sys_, jnp.asarray(res.rho), p, st_.h)
+    need = np.asarray(st_.alpha) * float(sys_.L) / float(sys_.T)
+    got = np.asarray(rates)
+    active = (np.asarray(res.rho).sum(1) > 0)
+    # every matched available device hits its target (tight constraints)
+    assert np.allclose(got[active], need[active], rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_closed_form_is_feasible_and_minimal(seed):
+    """Any uniform scale-down of the closed-form powers violates (16)."""
+    sys_, st_ = make_round(seed=seed % 2**31)
+    res = matching.swap_matching(sys_, st_.h, st_.alpha)
+    if not res.feasible:
+        return
+    rho = jnp.asarray(res.rho)
+    p, _ = power.closed_form_power(sys_, rho, st_.h, st_.alpha)
+    ok = channel.upload_feasible(sys_, rho, p, st_.h, st_.alpha)
+    assert bool(jnp.all(ok))
+    shrunk = channel.upload_feasible(sys_, rho, p * 0.95, st_.h, st_.alpha,
+                                     rtol=0.0)
+    active = np.asarray(rho).sum(1) > 0
+    assert not bool(jnp.all(jnp.asarray(shrunk)[active]))
+
+
+@pytest.mark.slow
+def test_ccp_converges_to_closed_form():
+    """Algorithm 3 (CCP) reaches the exact optimum of (28)."""
+    sys_, st_ = make_round(seed=7)
+    res = matching.swap_matching(sys_, st_.h, st_.alpha)
+    rho = jnp.asarray(res.rho)
+    p_cf, _ = power.closed_form_power(sys_, rho, st_.h, st_.alpha)
+    cost_cf = float(jnp.sum(sys_.c[:, None] * rho * p_cf) * sys_.T)
+    out = power.ccp_power(sys_, rho, st_.h, st_.alpha)
+    assert out.feasible
+    cost_ccp = float(jnp.sum(sys_.c[:, None] * rho * out.p) * sys_.T)
+    assert abs(cost_ccp - cost_cf) / cost_cf < 5e-3
+    # trajectory is (weakly) decreasing after the first iterate
+    traj = out.trajectory
+    assert all(traj[i + 1] <= traj[i] * (1 + 1e-6)
+               for i in range(len(traj) - 1))
+
+
+@pytest.mark.slow
+def test_ccp_robust_to_initial_point():
+    """Paper Fig. 3: identical objective from different feasible inits."""
+    sys_, st_ = make_round(seed=9)
+    res = matching.swap_matching(sys_, st_.h, st_.alpha)
+    rho = jnp.asarray(res.rho)
+    p_cf, _ = power.closed_form_power(sys_, rho, st_.h, st_.alpha)
+    finals = []
+    for scale in (1.2, 2.0, 4.0):
+        p0 = jnp.minimum(p_cf * scale,
+                         sys_.p_max[:, None] * rho * (1 - 1e-4))
+        out = power.ccp_power(sys_, rho, st_.h, st_.alpha, p0=p0)
+        finals.append(out.trajectory[-1])
+    assert max(finals) - min(finals) < 5e-3 * max(finals)
+
+
+# ---------------------------------------------------------------- matching
+
+def test_matching_respects_constraints():
+    for seed in range(5):
+        sys_, st_ = make_round(seed=seed)
+        res = matching.swap_matching(sys_, st_.h, st_.alpha)
+        rho = jnp.asarray(res.rho)
+        assert bool(channel.assignment_valid(sys_, rho, st_.alpha))
+
+
+def test_matching_beats_or_ties_naive_assignments():
+    """Swap matching should never end up worse than the greedy baselines."""
+    from repro.core import joint
+    sys_, st_ = make_round(seed=11)
+    res = matching.swap_matching(sys_, st_.h, st_.alpha)
+    for idx in (3, 4):  # all-data baselines share the matching cost shape
+        bl = joint.baseline_scheme(sys_, st_, idx)
+        if not bl.feasible:
+            continue
+        p_bl = jnp.asarray(bl.p)
+        cost_bl = float(jnp.sum(sys_.c[:, None] * jnp.asarray(bl.rho) * p_bl)
+                        * sys_.T)
+        assert res.cost <= cost_bl * (1 + 1e-6)
+
+
+def test_matching_cost_decreases_with_swaps():
+    """The returned matching is a local optimum: no single swap improves."""
+    sys_, st_ = make_round(seed=13)
+    res = matching.swap_matching(sys_, st_.h, st_.alpha)
+    assign = res.assign.copy()
+    avail = np.flatnonzero(np.asarray(st_.alpha) > 0)
+    scorer = matching._Scorer(sys_, np.asarray(st_.h, np.float64),
+                              np.asarray(st_.alpha, np.float64),
+                              "closed_form")
+    members = [np.flatnonzero(assign == n) for n in range(sys_.N)]
+    base = sum(scorer.rb_cost(n, members[n]) for n in range(sys_.N))
+    for u in avail:
+        for k in avail:
+            if k <= u or assign[u] < 0 or assign[k] < 0:
+                continue
+            if assign[u] == assign[k]:
+                continue
+            nu, nk = assign[u], assign[k]
+            mu_ = np.append(members[nu][members[nu] != u], k)
+            mk_ = np.append(members[nk][members[nk] != k], u)
+            cand = (base
+                    - scorer.rb_cost(nu, members[nu])
+                    - scorer.rb_cost(nk, members[nk])
+                    + scorer.rb_cost(nu, mu_)
+                    + scorer.rb_cost(nk, mk_))
+            assert cand >= base - 1e-12
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_noma_rate_conservation_property(seed):
+    """SIC property: the sum rate of co-RB devices equals the
+    single-user capacity of the total received power (information-
+    theoretic identity of superposition coding)."""
+    sys_, st_ = make_round(seed=seed % 2**31, K=4, N=1, Q=4)
+    rho = np.ones((4, 1), np.float32)
+    p = np.abs(np.asarray(jax.random.normal(
+        jax.random.PRNGKey(seed % 2**31), (4, 1)))) * 0.1
+    h = np.asarray(st_.h)
+    rates = np.asarray(channel.rate(sys_, jnp.asarray(rho),
+                                    jnp.asarray(p), st_.h))
+    total_power = float(np.sum(p[:, 0] * h[:, 0]))
+    capacity = float(sys_.B) * np.log2(1 + total_power / float(sys_.N0))
+    assert np.isclose(np.sum(rates), capacity, rtol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_closed_form_power_scales_with_gamma(seed):
+    """More bits per RB-second (larger L) -> strictly more power for
+    every active device."""
+    import dataclasses
+    sys_, st_ = make_round(seed=seed % 2**31)
+    res = matching.swap_matching(sys_, st_.h, st_.alpha)
+    if not res.feasible:
+        return
+    rho = jnp.asarray(res.rho)
+    p1, _ = power.closed_form_power(sys_, rho, st_.h, st_.alpha)
+    sys2 = dataclasses.replace(sys_, L=sys_.L * 1.5)
+    p2, _ = power.closed_form_power(sys2, rho, st_.h, st_.alpha)
+    active = np.asarray(rho) * np.asarray(st_.alpha)[:, None] > 0
+    assert np.all(np.asarray(p2)[active] > np.asarray(p1)[active])

@@ -1,0 +1,128 @@
+"""Tests for data selection (Algorithms 4-5) and the exact oracle."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import default_system, sample_round
+from repro.core import delta as delta_mod
+from repro.core import selection as sel_mod
+
+
+def make(seed=0, K=4, D=6):
+    sys_ = default_system(K=K, N=3, Q=2, D_hat=D)
+    st_ = sample_round(jax.random.PRNGKey(seed), sys_)
+    return sys_, st_
+
+
+def brute_force_optimum(sys_, sigma, mask):
+    """Enumerate all feasible binary selections (tiny instances only)."""
+    K, J = sigma.shape
+    sigma = np.asarray(sigma)
+    best_val, best_sel = np.inf, None
+    per_device = []
+    for k in range(K):
+        opts = []
+        J_k = int(np.asarray(mask)[k].sum())
+        for r in range(1, J_k + 1):
+            for idx in itertools.combinations(range(J_k), r):
+                opts.append(idx)
+        per_device.append(opts)
+    # per-device decoupling means we can optimize each device separately
+    A = np.asarray(sys_.a_weights())
+    q = np.asarray(sys_.q)
+    lam = float(sys_.lam)
+    sel = np.zeros((K, J), np.float32)
+    for k in range(K):
+        best_k, best_idx = np.inf, None
+        for idx in per_device[k]:
+            s = sigma[k, list(idx)]
+            val = lam * A[k] * s.mean() - (1 - lam) * q[k] * len(idx)
+            if val < best_k:
+                best_k, best_idx = val, idx
+        sel[k, list(best_idx)] = 1.0
+    return sel
+
+
+def objective(sys_, d, sigma):
+    return float(delta_mod.selection_only_objective(sys_, d, sigma))
+
+
+def test_exact_selection_matches_bruteforce():
+    for seed in range(5):
+        sys_, st_ = make(seed=seed)
+        d_star = brute_force_optimum(sys_, st_.sigma, st_.sigma_mask)
+        d_got = sel_mod.exact_selection(sys_, st_.sigma, st_.sigma_mask)
+        v_star = objective(sys_, jnp.asarray(d_star), st_.sigma)
+        v_got = objective(sys_, d_got, st_.sigma)
+        assert np.isclose(v_got, v_star, rtol=1e-5), (seed, v_got, v_star)
+
+
+def test_faithful_selection_feasible_and_near_oracle():
+    sys_, st_ = make(seed=3, K=6, D=10)
+    d = sel_mod.faithful_selection(sys_, st_.sigma, st_.sigma_mask,
+                                   step0=5.0)
+    d_np = np.asarray(d)
+    mask = np.asarray(st_.sigma_mask)
+    assert set(np.unique(d_np)).issubset({0.0, 1.0})
+    assert np.all(d_np <= mask)
+    assert np.all(d_np.sum(axis=1) >= 1)  # constraint (25)
+    v_faith = objective(sys_, d, st_.sigma)
+    v_exact = objective(sys_, sel_mod.exact_selection(
+        sys_, st_.sigma, st_.sigma_mask), st_.sigma)
+    # the paper's algorithm is suboptimal but should be in the ballpark
+    assert v_faith >= v_exact - 1e-6  # oracle really is a lower bound
+    assert v_faith <= v_exact + 0.35 * abs(v_exact) + 1.0
+
+
+def test_binary_recovery_is_lp_optimum():
+    """Threshold-at-1/2 equals brute-force minimization of (38)."""
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        K, J = 3, 4
+        d_cont = rng.uniform(0, 1, (K, J)).astype(np.float32)
+        mask = np.ones((K, J), np.float32)
+        got = np.asarray(sel_mod.binary_recovery(jnp.asarray(d_cont),
+                                                 jnp.asarray(mask)))
+        # brute force min ||delta - d_cont||^2 over feasible binaries
+        best_val, best = np.inf, None
+        for bits in itertools.product([0, 1], repeat=K * J):
+            cand = np.array(bits, np.float32).reshape(K, J)
+            if np.any(cand.sum(axis=1) < 1):
+                continue
+            val = float(np.sum((cand - d_cont) ** 2))
+            if val < best_val - 1e-12:
+                best_val, best = val, cand
+        got_val = float(np.sum((got - d_cont) ** 2))
+        assert np.isclose(got_val, best_val, rtol=1e-6), (got_val, best_val)
+
+
+def test_projection_feasible_set():
+    rng = np.random.default_rng(1)
+    z = jnp.asarray(rng.normal(0, 2, (5, 7)).astype(np.float32))
+    mask = np.ones((5, 7), np.float32)
+    mask[2, 4:] = 0
+    out = np.asarray(sel_mod.project_feasible(z, jnp.asarray(mask)))
+    assert np.all(out >= -1e-6) and np.all(out <= 1 + 1e-6)
+    assert np.all(out.sum(axis=1) >= 1 - 1e-4)
+    assert np.all(out[2, 4:] == 0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_projection_is_idempotent_and_closer(seed):
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.normal(0, 2, (3, 5)).astype(np.float32))
+    mask = jnp.ones((3, 5), jnp.float32)
+    p1 = sel_mod.project_feasible(z, mask)
+    p2 = sel_mod.project_feasible(p1, mask)
+    assert np.allclose(np.asarray(p1), np.asarray(p2), atol=1e-4)
+    # projection theorem: feasible points are no closer to z than proj(z)
+    for _ in range(5):
+        w = np.clip(rng.uniform(0, 1, (3, 5)), 0, 1).astype(np.float32)
+        w = w / np.maximum(w.sum(1, keepdims=True), 1e-9)  # sums to 1
+        d_w = float(np.sum((w - np.asarray(z)) ** 2))
+        d_p = float(np.sum((np.asarray(p1) - np.asarray(z)) ** 2))
+        assert d_p <= d_w + 1e-4

@@ -1,0 +1,118 @@
+"""Per-kernel allclose validation against the pure-jnp oracles
+(interpret mode), with shape/dtype sweeps + hypothesis properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gradnorm import rownorm2
+from repro.kernels.lru_scan import lru_scan
+
+
+@pytest.mark.parametrize("bh,s,d", [(4, 128, 64), (2, 200, 32),
+                                    (3, 513, 128), (1, 64, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(bh, s, d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(s + d), 3)
+    q, k, v = (jax.random.normal(kk, (bh, s, d), dtype) for kk in ks)
+    got = flash_attention(q, k, v, causal=True, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_noncausal():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q, k, v = (jax.random.normal(kk, (2, 96, 64), jnp.float32) for kk in ks)
+    got = flash_attention(q, k, v, causal=False, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_flash_attention_bhsd_wrapper():
+    B, S, H, d = 2, 130, 3, 32
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q, k, v = (jax.random.normal(kk, (B, S, H, d), jnp.float32)
+               for kk in ks)
+    got = ops.flash_attention_bhsd(q, k, v)
+    fold = lambda x: jnp.moveaxis(x, 2, 1).reshape(B * H, S, d)
+    want = ref.flash_attention_ref(fold(q), fold(k), fold(v))
+    want = jnp.moveaxis(want.reshape(B, H, S, d), 1, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("n,f", [(10, 50), (300, 700), (8, 4096),
+                                 (1000, 130)])
+def test_rownorm2_matches_ref(n, f):
+    x = jax.random.normal(jax.random.PRNGKey(n * f), (n, f))
+    got = rownorm2(x, interpret=True)
+    want = ref.rownorm2_ref(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5)
+
+
+def test_gradnorm_sigma_equals_autodiff():
+    """The fused score equals the true per-sample last-layer grad norm."""
+    key = jax.random.PRNGKey(3)
+    N, D, V = 12, 20, 7
+    h = jax.random.normal(key, (N, D))
+    W = jax.random.normal(jax.random.fold_in(key, 1), (D, V)) * 0.3
+    b = jnp.zeros((V,))
+    labels = jax.random.randint(jax.random.fold_in(key, 2), (N,), 0, V)
+
+    def loss_one(Wb, hi, yi):
+        W, b = Wb
+        logits = hi @ W + b
+        return -jax.nn.log_softmax(logits)[yi]
+
+    sig_true = []
+    for i in range(N):
+        g = jax.grad(loss_one)((W, b), h[i], labels[i])
+        sig_true.append(float(sum(jnp.sum(x ** 2)
+                                  for x in jax.tree.leaves(g))))
+    logits = h @ W + b
+    got = ops.sigma_from_head(h, logits, labels, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(sig_true),
+                               rtol=1e-4)
+
+
+@pytest.mark.parametrize("b,s,c", [(1, 17, 8), (2, 300, 130),
+                                   (3, 256, 256), (2, 512, 64)])
+def test_lru_scan_matches_sequential(b, s, c):
+    key = jax.random.PRNGKey(b * s + c)
+    a = jax.random.uniform(key, (b, s, c), minval=0.3, maxval=0.999)
+    bb = jax.random.normal(jax.random.fold_in(key, 1), (b, s, c))
+    got = lru_scan(a, bb, interpret=True)
+    want = ref.lru_scan_ref(a, bb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 60), st.integers(1, 40))
+def test_lru_scan_property(b, s, c):
+    key = jax.random.PRNGKey(b * 1000 + s * 10 + c)
+    a = jax.random.uniform(key, (b, s, c), minval=0.0, maxval=1.0)
+    bb = jax.random.normal(jax.random.fold_in(key, 1), (b, s, c))
+    got = np.asarray(lru_scan(a, bb, interpret=True))
+    want = np.asarray(ref.lru_scan_ref(a, bb))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    # property: with a == 0 the scan is the identity on b
+    got0 = np.asarray(lru_scan(jnp.zeros_like(a), bb, interpret=True))
+    np.testing.assert_allclose(got0, np.asarray(bb), rtol=1e-5, atol=1e-6)
+
+
+def test_lru_scan_matches_associative_scan_path():
+    """Kernel == the jnp associative_scan the models actually use."""
+    from repro.models.ssm import _scan_assoc
+    key = jax.random.PRNGKey(9)
+    a = jax.random.uniform(key, (2, 64, 32), minval=0.5, maxval=0.99)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (2, 64, 32))
+    got = np.asarray(lru_scan(a, b, interpret=True))
+    want = np.asarray(_scan_assoc(a[..., None], b[..., None])[..., 0])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)

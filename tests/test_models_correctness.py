@@ -1,0 +1,226 @@
+"""Deeper model correctness: decode-vs-prefill consistency, windowed
+attention exactness, GQA layout, M-RoPE, MoE routing, recurrent-state
+equivalence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import init_model, make_cache, make_decode_step, \
+    make_forward, make_prefill_step
+from repro.models.layers import (apply_rope, causal_attend,
+                                 local_attend_chunked)
+from repro.models.moe import moe_ffn
+
+
+def _full_logits(cfg, params, batch):
+    logits, _, _ = make_forward(cfg)(params, batch)
+    return np.asarray(logits, np.float32)
+
+
+@pytest.mark.parametrize("arch", ["llama3_2-3b", "gemma3-12b",
+                                  "falcon-mamba-7b", "recurrentgemma-9b",
+                                  "deepseek-v3-671b", "musicgen-medium"])
+def test_decode_matches_full_forward(arch):
+    """prefill(t[:n]) then decode t[n], t[n+1]... reproduces the full
+    forward's next-token logits — the cache path is exact."""
+    # float32 so jit-vs-eager fusion noise (bf16) can't mask real bugs
+    cfg = dataclasses.replace(smoke_config(arch), remat=False,
+                              dtype="float32")
+    B, S, n_pre = 2, 12, 8
+    key = jax.random.PRNGKey(0)
+    params = init_model(key, cfg)
+
+    if cfg.modality == "audio":
+        toks = jax.random.randint(key, (B, cfg.n_codebooks, S), 0,
+                                  cfg.vocab)
+        full_batch = {"tokens": toks, "labels": toks}
+        pre_batch = {"tokens": toks[..., :n_pre]}
+    else:
+        toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+        full_batch = {"tokens": toks, "labels": toks}
+        pre_batch = {"tokens": toks[:, :n_pre]}
+
+    full = _full_logits(cfg, params, full_batch)  # (B, S, [C,] V)
+
+    logits_p, cache = jax.jit(make_prefill_step(cfg))(params, pre_batch)
+    grown = make_cache(cfg, B, S)
+
+    def graft(dst, src):
+        if dst.shape == src.shape:
+            return src
+        pad = [(0, d - s) for d, s in zip(dst.shape, src.shape)]
+        return jnp.pad(src, pad).astype(dst.dtype)
+
+    cache = jax.tree.map(graft, grown, cache)
+
+    # prefill's last-position logits == full forward at n_pre-1
+    np.testing.assert_allclose(np.asarray(logits_p[:, -1], np.float32),
+                               full[:, n_pre - 1], atol=2e-2, rtol=2e-2)
+
+    decode = jax.jit(make_decode_step(cfg))
+    for t in range(n_pre, S):
+        if cfg.modality == "audio":
+            db = {"tokens": toks[..., t:t + 1],
+                  "cache_index": jnp.int32(t)}
+        else:
+            db = {"tokens": toks[:, t:t + 1], "cache_index": jnp.int32(t)}
+        logits_d, cache = decode(params, cache, db)
+        np.testing.assert_allclose(
+            np.asarray(logits_d[:, -1], np.float32), full[:, t],
+            atol=3e-2, rtol=3e-2)
+
+
+def test_local_attention_equals_full_when_window_covers():
+    key = jax.random.PRNGKey(0)
+    B, S, H, D = 2, 48, 4, 16
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (B, S, H, D))
+               for i in range(3))
+    full = causal_attend(q, k, v)
+    local = local_attend_chunked(q, k, v, window=S)
+    np.testing.assert_allclose(np.asarray(local), np.asarray(full),
+                               atol=1e-5)
+
+
+def test_local_attention_equals_masked_reference():
+    key = jax.random.PRNGKey(1)
+    B, S, H, D, W = 1, 37, 2, 8, 8
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (B, S, H, D))
+               for i in range(3))
+    got = local_attend_chunked(q, k, v, window=W)
+    want = causal_attend(q, k, v, window=W)  # independent mask impl
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5)
+
+
+def test_gqa_equals_repeated_kv():
+    key = jax.random.PRNGKey(2)
+    B, S, H, Hk, D = 2, 24, 8, 2, 16
+    q = jax.random.normal(key, (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, Hk, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, Hk, D))
+    got = causal_attend(q, k, v)
+    # reference: repeat kv heads and run MHA
+    rep = H // Hk
+    kr = jnp.repeat(k, rep, axis=2)
+    vr = jnp.repeat(v, rep, axis=2)
+    want = causal_attend(q, kr, vr)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5)
+
+
+def test_mrope_sections_differ_by_axis():
+    """M-RoPE: different (t,h,w) position ids rotate different pair
+    sections; equal ids across sections == standard rope."""
+    B, S, H, D = 1, 6, 2, 32
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, D))
+    pos1d = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    pos3d_same = jnp.broadcast_to(jnp.arange(S)[None, None], (B, 3, S))
+    same = apply_rope(x, pos3d_same, 1e4, 1.0, (4, 6, 6))
+    std = apply_rope(x, pos1d, 1e4, 1.0)
+    np.testing.assert_allclose(np.asarray(same), np.asarray(std),
+                               atol=1e-5)
+    pos3d_diff = pos3d_same.at[:, 1].add(5)
+    diff = apply_rope(x, pos3d_diff, 1e4, 1.0, (4, 6, 6))
+    assert not np.allclose(np.asarray(diff), np.asarray(std), atol=1e-3)
+
+
+def test_partial_rope_preserves_tail_dims():
+    B, S, H, D = 1, 4, 1, 16
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, D))
+    out = apply_rope(x, jnp.arange(S)[None], 1e4, fraction=0.25)
+    np.testing.assert_allclose(np.asarray(out[..., 4:]),
+                               np.asarray(x[..., 4:]), atol=1e-6)
+    assert not np.allclose(np.asarray(out[..., :4]),
+                           np.asarray(x[..., :4]), atol=1e-4)
+
+
+def test_moe_routing_mass_and_aux():
+    cfg = smoke_config("deepseek-v3-671b")
+    from repro.models.moe import init_moe
+    p = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    y, aux = moe_ffn(cfg, p, x)
+    assert y.shape == x.shape
+    assert np.isfinite(float(aux)) and float(aux) >= 0
+    # capacity large enough here -> every token processed by topk experts;
+    # output must differ from zero and react to input scaling
+    y2, _ = moe_ffn(cfg, p, x * 2.0)
+    assert not np.allclose(np.asarray(y), 0.0)
+    assert not np.allclose(np.asarray(y), np.asarray(y2))
+
+
+@pytest.mark.parametrize("arch", ["falcon-mamba-7b", "recurrentgemma-9b"])
+def test_recurrent_prefill_state_equals_stepwise(arch):
+    """Prefill's final recurrent state == running decode token by token."""
+    cfg = dataclasses.replace(smoke_config(arch), remat=False,
+                              dtype="float32")
+    B, S = 1, 6
+    key = jax.random.PRNGKey(0)
+    params = init_model(key, cfg)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+
+    _, cache_pre = jax.jit(make_prefill_step(cfg))(params,
+                                                   {"tokens": toks})
+    # step-by-step: prefill 1 token then decode the rest
+    _, cache_step = jax.jit(make_prefill_step(cfg))(
+        params, {"tokens": toks[:, :1]})
+    grown = make_cache(cfg, B, S)
+
+    def graft(dst, src):
+        if dst.shape == src.shape:
+            return src
+        pad = [(0, d - s) for d, s in zip(dst.shape, src.shape)]
+        return jnp.pad(src, pad).astype(dst.dtype)
+
+    cache_step = jax.tree.map(graft, grown, cache_step)
+    decode = jax.jit(make_decode_step(cfg))
+    for t in range(1, S):
+        _, cache_step = decode(params, cache_step,
+                               {"tokens": toks[:, t:t + 1],
+                                "cache_index": jnp.int32(t)})
+
+    def leaves_named(c):
+        return {"/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                         for q in path): leaf
+                for path, leaf in
+                jax.tree_util.tree_flatten_with_path(c)[0]}
+
+    pre, step = leaves_named(cache_pre), leaves_named(cache_step)
+    for name in pre:
+        if name.endswith("/h"):  # recurrent states must agree
+            np.testing.assert_allclose(
+                np.asarray(pre[name], np.float32),
+                np.asarray(step[name], np.float32), atol=3e-2, rtol=3e-2)
+
+
+def test_mla_absorbed_equals_naive_decode():
+    """The absorbed decode path (50x FLOP win, EXPERIMENTS.md §Perf A)
+    must be numerically identical to the naive latent re-expansion."""
+    cfg = dataclasses.replace(smoke_config("deepseek-v2-236b"),
+                              remat=False, dtype="float32")
+    B, S = 2, 10
+    key = jax.random.PRNGKey(0)
+    from repro.models import init_model as _init
+    params = _init(key, cfg)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    _, cache = jax.jit(make_prefill_step(cfg))(params, {"tokens": toks})
+    grown = make_cache(cfg, B, S + 2)
+
+    def graft(dst, src):
+        if dst.shape == src.shape:
+            return src
+        pad = [(0, d - s) for d, s in zip(dst.shape, src.shape)]
+        return jnp.pad(src, pad).astype(dst.dtype)
+
+    cache = jax.tree.map(graft, grown, cache)
+    db = {"tokens": toks[:, :1], "cache_index": jnp.int32(S)}
+    naive, _ = jax.jit(make_decode_step(cfg, mla_absorbed=False))(
+        params, cache, db)
+    absorbed, _ = jax.jit(make_decode_step(cfg, mla_absorbed=True))(
+        params, cache, db)
+    np.testing.assert_allclose(np.asarray(naive), np.asarray(absorbed),
+                               atol=1e-4, rtol=1e-4)

@@ -1,0 +1,156 @@
+"""Optimizers, schedules, data pipeline, checkpointing."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import optim
+from repro.checkpoint import load_pytree, save_pytree
+from repro.data import SyntheticImages, mislabel, non_iid_split
+
+
+@pytest.mark.parametrize("name", ["sgd", "momentum", "adam", "adamw",
+                                  "adafactor"])
+def test_optimizers_minimize_quadratic(name):
+    builder = {"sgd": lambda: optim.sgd(0.1),
+               "momentum": lambda: optim.momentum(0.05),
+               "adam": lambda: optim.adam(0.1),
+               "adamw": lambda: optim.adamw(0.1, weight_decay=0.0),
+               "adafactor": lambda: optim.adafactor(0.3)}[name]
+    opt = builder()
+    target = jnp.asarray(np.random.default_rng(0).normal(0, 1, (4, 8)),
+                         jnp.float32)
+    params = {"w": jnp.zeros((4, 8)), "b": jnp.zeros((8,))}
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2) + jnp.sum(p["b"] ** 2)
+
+    state = opt.init(params)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = optim.apply_updates(params, upd)
+    assert float(loss(params)) < 0.05 * float(jnp.sum(target ** 2))
+
+
+def test_adafactor_state_is_factored():
+    opt = optim.adafactor(1e-2)
+    params = {"w": jnp.zeros((64, 32)), "v": jnp.zeros((16,))}
+    state = opt.init(params)
+    assert state.vr["w"].shape == (64,)
+    assert state.vc["w"].shape == (32,)
+    assert state.vr["v"].shape == (16,)
+
+
+def test_clip_by_global_norm():
+    opt = optim.chain(optim.clip_by_global_norm(1.0), optim.sgd(1.0))
+    state = opt.init({"w": jnp.zeros(3)})
+    upd, _ = opt.update({"w": jnp.asarray([3.0, 4.0, 0.0])}, state, None)
+    norm = float(jnp.linalg.norm(upd["w"]))
+    assert abs(norm - 1.0) < 1e-5
+
+
+def test_schedules():
+    from repro.optim import cosine_schedule, warmup_cosine
+    cos = cosine_schedule(100, final_frac=0.1)
+    assert float(cos(jnp.asarray(0))) == pytest.approx(1.0)
+    assert float(cos(jnp.asarray(100))) == pytest.approx(0.1)
+    wc = warmup_cosine(10, 110)
+    assert float(wc(jnp.asarray(0))) == pytest.approx(0.0)
+    assert float(wc(jnp.asarray(10))) == pytest.approx(1.0, abs=1e-2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.0, 0.5), st.integers(10, 200))
+def test_mislabel_proportion(prop, n):
+    labels = np.random.default_rng(0).integers(0, 10, n).astype(np.int32)
+    bad, mask = mislabel(labels, prop, 10, seed=1)
+    assert mask.sum() == int(round(prop * n))
+    # every flagged label is actually wrong, every unflagged is intact
+    assert np.all(bad[mask] != labels[mask])
+    assert np.all(bad[~mask] == labels[~mask])
+
+
+def test_non_iid_split_single_label():
+    data = SyntheticImages.make(500, side=12, seed=0)
+    test = SyntheticImages.make(100, side=12, seed=1)
+    fd = non_iid_split(data, test, K=5, per_device=30, mislabel_prop=0.2,
+                       seed=0)
+    for k in range(5):
+        assert np.all(fd.device_true[k] == k % 10)
+        frac_bad = np.mean(fd.device_labels[k] != fd.device_true[k])
+        assert abs(frac_bad - 0.2) < 0.05
+
+
+def test_synthetic_classes_are_separable():
+    """A linear probe must beat chance comfortably — otherwise the
+    paper-validation experiments would be meaningless."""
+    data = SyntheticImages.make(1200, side=12, seed=0)
+    X = data.images.reshape(len(data), -1)
+    y = data.true_labels
+    Xtr, ytr, Xte, yte = X[:1000], y[:1000], X[1000:], y[1000:]
+    # one-step ridge classifier
+    A = np.concatenate([Xtr, np.ones((len(Xtr), 1))], axis=1)
+    Y = np.eye(10)[ytr]
+    W = np.linalg.solve(A.T @ A + 1e-1 * np.eye(A.shape[1]), A.T @ Y)
+    pred = np.argmax(
+        np.concatenate([Xte, np.ones((len(Xte), 1))], axis=1) @ W, axis=1)
+    acc = float(np.mean(pred == yte))
+    assert acc > 0.5, acc
+
+
+def test_checkpoint_roundtrip():
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16)},
+            "list": [jnp.zeros((2,)), jnp.ones((2,))]}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ckpt.npz")
+        save_pytree(path, tree, metadata={"step": 7})
+        out = load_pytree(path, tree)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+        from repro.checkpoint.checkpoint import load_metadata
+        assert load_metadata(path)["step"] == 7
+
+
+def test_mnist_loader_fallback_and_idx():
+    """Loader falls back to synthetic offline and parses IDX when
+    files exist."""
+    import gzip
+    import struct
+    import tempfile
+
+    from repro.data.mnist import available, load_mnist
+
+    with tempfile.TemporaryDirectory() as d:
+        assert not available(d)
+        tr, te = load_mnist(d, fallback_n=(50, 20), fallback_side=12)
+        assert tr.images.shape == (50, 12, 12)
+        assert te.images.shape == (20, 12, 12)
+
+        # write tiny real IDX files (gz) and check exact parse
+        rng = np.random.default_rng(0)
+        imgs = rng.integers(0, 255, (6, 28, 28)).astype(np.uint8)
+        labs = rng.integers(0, 10, (6,)).astype(np.uint8)
+
+        def write_idx(path, arr):
+            with gzip.open(path + ".gz", "wb") as f:
+                f.write(struct.pack(f">I{arr.ndim}I",
+                                    0x800 + arr.ndim, *arr.shape))
+                f.write(arr.tobytes())
+
+        for name, arr in (("train-images-idx3-ubyte", imgs),
+                          ("train-labels-idx1-ubyte", labs),
+                          ("t10k-images-idx3-ubyte", imgs),
+                          ("t10k-labels-idx1-ubyte", labs)):
+            write_idx(os.path.join(d, name), arr)
+        assert available(d)
+        tr, te = load_mnist(d)
+        assert tr.images.shape == (6, 28, 28)
+        np.testing.assert_allclose(tr.images * 255.0, imgs, atol=0.5)
+        np.testing.assert_array_equal(tr.true_labels, labs)
