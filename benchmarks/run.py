@@ -3,6 +3,9 @@ report.  Prints ``name,us_per_call,derived`` CSV.
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run --fast     # skip fig4/5/6
+    PYTHONPATH=src python -m benchmarks.run --trace t.jsonl
+                          # + record a repro.obs telemetry trace and
+                          #   append its telemetry.* rows to the CSV
 """
 from __future__ import annotations
 
@@ -18,7 +21,19 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: alg1,fig3,lemma3,fig4,"
                          "fig5,fig6,roofline")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a repro.obs JSONL telemetry trace and "
+                         "append its summary rows to the CSV output")
     args = ap.parse_args()
+
+    tele = None
+    if args.trace:
+        from repro import obs
+
+        tele = obs.Telemetry(path=args.trace,
+                             meta={"source": "benchmarks.run",
+                                   "argv": sys.argv[1:]})
+        obs.set_default(tele)
 
     from . import (alg1_latency, fig3_ccp_convergence, fig4_convergence_cost,
                    fig5_mislabel, fig6_availability, lemma3_bound, roofline)
@@ -48,6 +63,13 @@ def main() -> None:
             failed.append(name)
             print(f"{name},0.0,ERROR:{type(e).__name__}:{e}")
             traceback.print_exc(file=sys.stderr)
+
+    if tele is not None:
+        from repro import obs
+
+        obs.set_default(None)
+        tele.close()
+        obs.emit_summary(obs.summarize(tele.events))
     if failed:
         sys.exit(1)
 

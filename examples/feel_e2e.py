@@ -13,6 +13,7 @@ import types
 
 import jax
 
+from repro import obs
 from repro.core import default_system
 from repro.data import SyntheticImages, non_iid_split
 from repro.fed import FEELConfig, FEELTrainer
@@ -29,6 +30,10 @@ def main():
     ap.add_argument("--selection", default="faithful",
                     choices=["faithful", "exact"])
     ap.add_argument("--out", default=None)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a repro.obs JSONL telemetry trace "
+                         "(per-round stage timings, solver counters, "
+                         "per-device energy) and print its summary")
     args = ap.parse_args()
 
     train = SyntheticImages.make(6000, side=args.side, seed=0)
@@ -43,11 +48,22 @@ def main():
     model = types.SimpleNamespace(features=cnn.features, apply=cnn.apply,
                                   loss_fn=cnn.loss_fn,
                                   accuracy=cnn.accuracy)
-    trainer = FEELTrainer(sys_, data, model, params, cfg)
+    tele = None
+    if args.trace:
+        tele = obs.Telemetry(path=args.trace,
+                             meta={"source": "examples.feel_e2e",
+                                   "scheme": args.scheme,
+                                   "rounds": args.rounds})
+    trainer = FEELTrainer(sys_, data, model, params, cfg, telemetry=tele)
     metrics = trainer.run(args.rounds, verbose=True)
     final = [m for m in metrics if m.test_acc is not None][-1]
     print(f"\nFINAL: acc={final.test_acc:.3f} "
           f"cum_net_cost={final.cum_net_cost:+.3f}")
+    if tele is not None:
+        tele.close()
+        print(f"\ntelemetry trace -> {args.trace}")
+        print("name,us_per_call,derived")
+        obs.emit_summary(obs.summarize(tele.events))
     if args.out:
         with open(args.out, "w") as f:
             json.dump([m.__dict__ for m in metrics], f)

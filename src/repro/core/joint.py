@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from . import cost as cost_mod
 from . import delta as delta_mod
 from . import matching as matching_mod
@@ -40,14 +41,17 @@ class RoundDecision:
 
 
 def _finish(sys: SystemParams, rho, p, delta, state: RoundState,
-            feasible: bool, swaps: int = 0) -> RoundDecision:
-    rho_j = jnp.asarray(rho, jnp.float32)
-    p_j = jnp.asarray(p, jnp.float32)
-    delta_j = jnp.asarray(delta, jnp.float32)
-    n_sel = jnp.sum(delta_j, axis=1)
-    nc = float(cost_mod.net_cost(sys, rho_j, p_j, n_sel))
-    dv = float(delta_mod.delta(sys, delta_j, state.sigma))
-    obj = float(sys.lam) * dv + (1.0 - float(sys.lam)) * nc
+            feasible: bool, swaps: int = 0,
+            telemetry=None) -> RoundDecision:
+    tele = obs.resolve(telemetry)
+    with tele.stage("objective"):
+        rho_j = jnp.asarray(rho, jnp.float32)
+        p_j = jnp.asarray(p, jnp.float32)
+        delta_j = jnp.asarray(delta, jnp.float32)
+        n_sel = jnp.sum(delta_j, axis=1)
+        nc = float(cost_mod.net_cost(sys, rho_j, p_j, n_sel))
+        dv = float(delta_mod.delta(sys, delta_j, state.sigma))
+        obj = float(sys.lam) * dv + (1.0 - float(sys.lam)) * nc
     return RoundDecision(rho=np.asarray(rho), p=np.asarray(p),
                          delta=np.asarray(delta), net_cost=nc, delta_obj=dv,
                          objective=obj, feasible=feasible, swaps=swaps)
@@ -57,15 +61,20 @@ def proposed_scheme(sys: SystemParams, state: RoundState,
                     selection_method: str = "faithful",
                     power_evaluator: str = "closed_form",
                     gp_steps: int = 400,
-                    gp_step0: float = 0.3) -> RoundDecision:
+                    gp_step0: float = 0.3,
+                    telemetry=None) -> RoundDecision:
     """Algorithm 1 (the paper's proposed scheme)."""
+    tele = obs.resolve(telemetry)
     match = matching_mod.swap_matching(sys, state.h, state.alpha,
-                                       evaluator=power_evaluator)
-    delta = selection_mod.solve_selection(
-        sys, state.sigma, state.sigma_mask, method=selection_method,
-        steps=gp_steps, step0=gp_step0)
+                                       evaluator=power_evaluator,
+                                       telemetry=tele)
+    with tele.stage("selection"):
+        delta = tele.block(selection_mod.solve_selection(
+            sys, state.sigma, state.sigma_mask, method=selection_method,
+            steps=gp_steps, step0=gp_step0, telemetry=tele))
     return _finish(sys, match.rho, match.p, delta, state,
-                   feasible=match.feasible, swaps=match.swaps)
+                   feasible=match.feasible, swaps=match.swaps,
+                   telemetry=tele)
 
 
 # --------------------------------------------------------------------------
@@ -103,20 +112,27 @@ def _random_half(key: jax.Array, mask: Array) -> Array:
 
 
 def baseline_scheme(sys: SystemParams, state: RoundState, index: int,
-                    key: Optional[jax.Array] = None) -> RoundDecision:
+                    key: Optional[jax.Array] = None,
+                    telemetry=None) -> RoundDecision:
     """Baselines 1-4: (half|all data) x (min|max gain RB)."""
     if index not in (1, 2, 3, 4):
         raise ValueError("baseline index must be 1..4")
+    tele = obs.resolve(telemetry)
     half = index in (1, 2)
     prefer_max = index in (2, 4)
-    if half:
-        assert key is not None, "baselines 1/2 need a PRNG key"
-        delta = _random_half(key, state.sigma_mask)
-    else:
-        delta = state.sigma_mask
+    with tele.stage("selection"):
+        if half:
+            assert key is not None, "baselines 1/2 need a PRNG key"
+            delta = tele.block(_random_half(key, state.sigma_mask))
+        else:
+            delta = state.sigma_mask
     h = np.asarray(state.h)
     alpha = np.asarray(state.alpha)
-    rho = _greedy_rb(sys, h, alpha, prefer_max)
-    p, _, ok = power_mod.allocate_power(
-        sys, jnp.asarray(rho), state.h, state.alpha, method="closed_form")
-    return _finish(sys, rho, p, delta, state, feasible=ok)
+    with tele.stage("matching"):
+        rho = _greedy_rb(sys, h, alpha, prefer_max)
+    with tele.stage("power"):
+        p, _, ok = power_mod.allocate_power(
+            sys, jnp.asarray(rho), state.h, state.alpha,
+            method="closed_form", telemetry=tele)
+        p = tele.block(p)
+    return _finish(sys, rho, p, delta, state, feasible=ok, telemetry=tele)

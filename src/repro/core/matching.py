@@ -29,6 +29,7 @@ from typing import Optional
 
 import numpy as np
 
+from .. import obs
 from . import power as power_mod
 from .types import SystemParams
 
@@ -81,8 +82,10 @@ class _Scorer:
         self.p_max = np.asarray(sys.p_max)
         self.N0 = float(sys.N0)
         self.T = float(sys.T)
+        self.evals = 0  # candidate per-RB power solves (telemetry)
 
     def rb_cost(self, n: int, members: np.ndarray) -> float:
+        self.evals += 1
         if self.evaluator == "closed_form":
             cost, _ = _rb_cost(self.sys, members, self.h[members, n],
                                self.c[members], self.p_max[members],
@@ -95,20 +98,25 @@ class _Scorer:
         rho[members, n] = 1.0
         _, cost, ok = power_mod.allocate_power(
             self.sys, jnp.asarray(rho), jnp.asarray(self.h),
-            jnp.asarray(self.alpha), method="ccp")
+            jnp.asarray(self.alpha), method="ccp", telemetry=obs.NULL)
         return cost if ok else _INF
 
 
 def swap_matching(sys: SystemParams, h, alpha, evaluator: str = "closed_form",
                   allow_moves: bool = True, max_sweeps: int = 50,
-                  rng: Optional[np.random.Generator] = None) -> MatchingResult:
+                  rng: Optional[np.random.Generator] = None,
+                  telemetry: Optional[obs.NullTelemetry] = None
+                  ) -> MatchingResult:
     """Algorithm 2. ``h``: (K,N) gains; ``alpha``: (K,) availability."""
+    tele = obs.resolve(telemetry)
     h = np.asarray(h, np.float64)
     alpha = np.asarray(alpha, np.float64)
     K, N, Q = sys.K, sys.N, sys.Q
     scorer = _Scorer(sys, h, alpha, evaluator)
     avail = np.flatnonzero(alpha > 0)
 
+    stage = tele.stage("matching")
+    stage.__enter__()
     # ---- initial matching Psi_0: greedy best-gain with capacity ----
     assign = np.full(K, -1, np.int64)
     slots = np.full(N, Q, np.int64)
@@ -176,13 +184,21 @@ def swap_matching(sys: SystemParams, h, alpha, evaluator: str = "closed_form",
     rho = np.zeros((K, N), np.float32)
     matched = assign >= 0
     rho[np.flatnonzero(matched), assign[matched]] = 1.0
+    stage.__exit__(None, None, None)
 
     # final powers under the chosen evaluator's assignment
     import jax.numpy as jnp
-    p, cost, ok = power_mod.allocate_power(
-        sys, jnp.asarray(rho), jnp.asarray(h, np.float32),
-        jnp.asarray(alpha, np.float32), method="closed_form")
+    with tele.stage("power"):
+        p, cost, ok = power_mod.allocate_power(
+            sys, jnp.asarray(rho), jnp.asarray(h, np.float32),
+            jnp.asarray(alpha, np.float32), method="closed_form",
+            telemetry=tele)
+        p = tele.block(p)
     all_matched = bool(np.all(assign[avail] >= 0)) if avail.size else True
+    feasible = ok and all_matched and np.isfinite(cost)
+    tele.solver("matching", swaps=swaps, sweeps=sweeps,
+                rb_evals=scorer.evals, unmatched=int(np.sum(~matched[avail]))
+                if avail.size else 0, feasible=bool(feasible))
     return MatchingResult(assign=assign, rho=rho, p=np.asarray(p),
                           cost=cost, swaps=swaps, sweeps=sweeps,
-                          feasible=ok and all_matched and np.isfinite(cost))
+                          feasible=feasible)

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from .types import SystemParams
 
 Array = jax.Array
@@ -213,16 +214,25 @@ def ccp_power(sys: SystemParams, rho: Array, h: Array, alpha: Array,
 
 
 def allocate_power(sys: SystemParams, rho: Array, h: Array, alpha: Array,
-                   method: str = "closed_form"):
-    """Unified entry point; returns (p, total upload cost, feasible)."""
+                   method: str = "closed_form", telemetry=None):
+    """Unified entry point; returns (p, total upload cost, feasible).
+
+    ``telemetry``: an ``obs`` sink for solver counters — ``None`` uses
+    the process default; pass ``obs.NULL`` to suppress (the matching
+    scorer does, so candidate evaluations don't flood the trace).
+    """
+    tele = obs.resolve(telemetry)
     if method == "closed_form":
         p, feas = closed_form_power(sys, rho, h, alpha)
         ok = bool(jnp.all(feas))
         cost = float(_upload_cost(sys, p, rho)) if ok else float("inf")
+        tele.solver("power", method=method, feasible=ok)
         return p, cost, ok
     if method == "ccp":
         res = ccp_power(sys, rho, h, alpha)
         cost = float(_upload_cost(sys, res.p, rho)) if res.feasible \
             else float("inf")
+        tele.solver("power", method=method, iterations=res.iterations,
+                    feasible=bool(res.feasible))
         return res.p, cost, res.feasible
     raise ValueError(f"unknown power method: {method}")

@@ -34,6 +34,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from . import delta as delta_mod
 from .types import SystemParams
 
@@ -165,10 +166,19 @@ def exact_selection(sys: SystemParams, sigma: Array, mask: Array) -> Array:
 
 def solve_selection(sys: SystemParams, sigma: Array, mask: Array,
                     method: str = "faithful", steps: int = 400,
-                    step0: float = 0.3) -> Array:
+                    step0: float = 0.3, telemetry=None) -> Array:
+    tele = obs.resolve(telemetry)
     if method == "faithful":
-        return faithful_selection(sys, sigma, mask, steps=steps,
-                                  step0=step0)
+        out = faithful_selection(sys, sigma, mask, steps=steps,
+                                 step0=step0)
+        if tele.enabled:
+            tele.solver("selection", method=method, gp_steps=steps,
+                        n_selected=int(jnp.sum(out)))
+        return out
     if method == "exact":
-        return exact_selection(sys, sigma, mask)
+        out = exact_selection(sys, sigma, mask)
+        if tele.enabled:
+            tele.solver("selection", method=method, gp_steps=0,
+                        n_selected=int(jnp.sum(out)))
+        return out
     raise ValueError(f"unknown selection method: {method}")

@@ -16,13 +16,15 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .. import optim
+from .. import obs, optim
+from ..core import cost as cost_mod
 from ..core import joint as joint_mod
 from ..core.types import RoundState, SystemParams
 from ..data.federated import FederatedDataset
@@ -66,13 +68,20 @@ class FEELTrainer:
     """Drives FEEL rounds for an image-classification model."""
 
     def __init__(self, sys: SystemParams, data: FederatedDataset,
-                 model, params, cfg: FEELConfig):
-        """``model`` exposes features(params, x), apply, loss_fn, accuracy."""
+                 model, params, cfg: FEELConfig,
+                 telemetry: Optional[obs.NullTelemetry] = None):
+        """``model`` exposes features(params, x), apply, loss_fn, accuracy.
+
+        ``telemetry``: an ``obs`` sink for the round-level trace; the
+        default (``None``) resolves to the process-wide sink, which is
+        a no-op unless e.g. ``benchmarks/run.py --trace`` installed one.
+        """
         self.sys = sys
         self.data = data
         self.model = model
         self.params = params
         self.cfg = cfg
+        self.obs = obs.resolve(telemetry)
         self.rng = np.random.default_rng(cfg.seed)
         self.key = jax.random.PRNGKey(cfg.seed)
         opt_builder = {"adam": optim.adam, "sgd": optim.sgd,
@@ -121,6 +130,14 @@ class FEELTrainer:
 
             return jax.vmap(one_device)(images, labels, delta)
 
+        if self.obs.annotate:
+            # optional jax.profiler trace annotations: the jitted round
+            # computations show up named in TensorBoard/Perfetto traces
+            sigma_all = obs.annotate_fn(sigma_all, "repro.sigma_all")
+            local_grads = obs.annotate_fn(local_grads, "repro.local_grads")
+            local_deltas = obs.annotate_fn(local_deltas,
+                                           "repro.local_deltas")
+
         self._sigma_all = sigma_all
         self._local_grads = local_grads
         self._local_deltas = local_deltas
@@ -138,11 +155,16 @@ class FEELTrainer:
 
 
     def run_round(self, i: int, eval_now: bool = False) -> RoundMetrics:
-        sys, cfg = self.sys, self.cfg
-        images, labels, true = self._gather_round_batches()
+        sys, cfg, tele = self.sys, self.cfg, self.obs
+        t_round = time.perf_counter()
+        tele.begin_round(i)
+
+        with tele.stage("data"):
+            images, labels, true = self._gather_round_batches()
         self.key, kh, ka, kb = jax.random.split(self.key, 4)
 
-        sigma = self._sigma_all(self.params, images, labels)
+        with tele.stage("sigma"):
+            sigma = tele.block(self._sigma_all(self.params, images, labels))
         h = jax.random.exponential(kh, (sys.K, sys.N)) * 1e-5
         alpha = (jax.random.uniform(ka, (sys.K,)) < sys.eps
                  ).astype(jnp.float32)
@@ -153,19 +175,22 @@ class FEELTrainer:
             # warmup: resource allocation as proposed, selection = all
             match = joint_mod.matching_mod.swap_matching(
                 sys, state.h, state.alpha,
-                evaluator=cfg.power_evaluator)
+                evaluator=cfg.power_evaluator, telemetry=tele)
+            with tele.stage("selection"):
+                pass  # warmup selects everything; keep the stage present
             dec = joint_mod._finish(sys, match.rho, match.p,
                                     np.asarray(mask), state,
                                     feasible=match.feasible,
-                                    swaps=match.swaps)
+                                    swaps=match.swaps, telemetry=tele)
         elif cfg.scheme == "proposed":
             dec = joint_mod.proposed_scheme(
                 sys, state, selection_method=cfg.selection_method,
                 power_evaluator=cfg.power_evaluator, gp_steps=cfg.gp_steps,
-                gp_step0=cfg.gp_step0)
+                gp_step0=cfg.gp_step0, telemetry=tele)
         elif cfg.scheme.startswith("baseline"):
             dec = joint_mod.baseline_scheme(sys, state,
-                                            int(cfg.scheme[-1]), key=kb)
+                                            int(cfg.scheme[-1]), key=kb,
+                                            telemetry=tele)
         else:
             raise ValueError(cfg.scheme)
 
@@ -173,31 +198,73 @@ class FEELTrainer:
         matched = jnp.asarray(dec.rho.sum(axis=1) > 0, jnp.float32)
         uploaded = alpha * matched
 
-        if cfg.local_steps > 1:
-            grads = self._local_deltas(self.params, images, labels, delta,
-                                       jnp.asarray(cfg.lr))
-        else:
-            grads = self._local_grads(self.params, images, labels, delta)
-        g_hat = server_mod.aggregate_gradients(sys, grads, uploaded)
+        with tele.stage("local_grads"):
+            if cfg.local_steps > 1:
+                grads = self._local_deltas(self.params, images, labels,
+                                           delta, jnp.asarray(cfg.lr))
+            else:
+                grads = self._local_grads(self.params, images, labels,
+                                          delta)
+            grads = tele.block(grads)
 
-        updates, self.opt_state = self.opt.update(g_hat, self.opt_state,
-                                                  self.params)
-        self.params = optim.apply_updates(self.params, updates)
+        with tele.stage("aggregate"):
+            g_hat = server_mod.aggregate_gradients(sys, grads, uploaded)
+            updates, self.opt_state = self.opt.update(g_hat, self.opt_state,
+                                                      self.params)
+            self.params = tele.block(optim.apply_updates(self.params,
+                                                         updates))
 
         sel = np.asarray(delta) > 0.5
         mislabeled = (np.asarray(labels) != true)
         frac_bad = (float(np.sum(sel & mislabeled)) / max(np.sum(sel), 1))
         acc = None
         if eval_now:
-            acc = self.model.accuracy(self.params, self.data.test_images,
-                                      self.data.test_labels)
+            with tele.stage("eval"):
+                acc = tele.block(self.model.accuracy(
+                    self.params, self.data.test_images,
+                    self.data.test_labels))
         self._cum = getattr(self, "_cum", 0.0) + dec.net_cost
+        n_uploaded = int(np.sum(np.asarray(uploaded)))
+        if tele.enabled:
+            self._record_round(tele, dec, sel, mislabeled,
+                               np.asarray(uploaded), acc,
+                               time.perf_counter() - t_round)
         return RoundMetrics(round=i, net_cost=dec.net_cost,
                             cum_net_cost=self._cum,
                             delta_obj=dec.delta_obj,
                             n_selected=int(np.sum(sel)),
-                            n_uploaded=int(np.sum(np.asarray(uploaded))),
+                            n_uploaded=n_uploaded,
                             frac_mislabeled_selected=frac_bad, test_acc=acc)
+
+    def _record_round(self, tele, dec, sel: np.ndarray,
+                      mislabeled: np.ndarray, uploaded: np.ndarray,
+                      acc, wall_s: float) -> None:
+        """Emit the per-device (eqs. 16-18 terms) and round roll-up
+        telemetry events.  Only called when the sink is enabled."""
+        sys = self.sys
+        rho_j = jnp.asarray(dec.rho, jnp.float32)
+        p_j = jnp.asarray(dec.p, jnp.float32)
+        e_cmp = np.asarray(cost_mod.energy_compute(sys), np.float64)
+        e_com = np.asarray(cost_mod.energy_upload(sys, rho_j, p_j),
+                           np.float64)
+        c = np.asarray(sys.c, np.float64)
+        q = np.asarray(sys.q, np.float64)
+        m_k = sel.sum(axis=1)
+        bad_k = (sel & mislabeled).sum(axis=1) / np.maximum(m_k, 1)
+        tele.devices(
+            energy_cmp_j=e_cmp.tolist(),
+            energy_com_j=e_com.tolist(),
+            cost=(c * (e_cmp + e_com)).tolist(),
+            reward=(q * m_k).tolist(),
+            selected=[int(v) for v in m_k],
+            uploaded=[int(v) for v in uploaded],
+            mislabel_frac=bad_k.tolist())
+        tele.round_end(wall_s=wall_s, net_cost=float(dec.net_cost),
+                       delta_obj=float(dec.delta_obj),
+                       n_selected=int(sel.sum()),
+                       n_uploaded=int(uploaded.sum()),
+                       feasible=bool(dec.feasible),
+                       test_acc=None if acc is None else float(acc))
 
     def run(self, rounds: int, verbose: bool = False) -> List[RoundMetrics]:
         out = []

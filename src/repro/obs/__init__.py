@@ -1,0 +1,39 @@
+"""Round-level observability for the FEEL reproduction.
+
+Where does a round's wall-clock and cost actually go — swap matching,
+CCP power allocation, gradient-projection selection, the local
+gradients themselves?  This package answers that with a versioned JSONL
+trace (``events``), a sink with a zero-overhead no-op default
+(``trace``) and an aggregator that rolls a trace into the benchmark CSV
+format (``summary``).  See docs/telemetry.md.
+
+Typical use::
+
+    from repro import obs
+
+    tele = obs.Telemetry(path="trace.jsonl")
+    trainer = FEELTrainer(sys_, data, model, params, cfg, telemetry=tele)
+    trainer.run(100)
+    tele.close()
+    obs.emit_summary(obs.summarize(tele.events))
+
+or process-wide (what ``benchmarks/run.py --trace`` does)::
+
+    obs.set_default(obs.Telemetry(path="trace.jsonl"))
+"""
+from . import events, summary, trace  # noqa: F401
+from .events import (CANONICAL_STAGES, REQUIRED_STAGES,  # noqa: F401
+                     SCHEMA_VERSION, DeviceEvent, RoundEvent, SolverEvent,
+                     StageEvent, parse_record)
+from .summary import load_trace, rows, summarize  # noqa: F401
+from .summary import emit as emit_summary  # noqa: F401
+from .trace import (NULL, NullTelemetry, Telemetry, annotate_fn,  # noqa: F401
+                    get_default, resolve, set_default)
+
+__all__ = [
+    "SCHEMA_VERSION", "CANONICAL_STAGES", "REQUIRED_STAGES",
+    "StageEvent", "SolverEvent", "DeviceEvent", "RoundEvent",
+    "parse_record", "NullTelemetry", "Telemetry", "NULL",
+    "set_default", "get_default", "resolve", "annotate_fn",
+    "load_trace", "summarize", "rows", "emit_summary",
+]

@@ -1,0 +1,4 @@
+"""``python -m repro.obs trace.jsonl`` — print a trace's CSV summary."""
+from .summary import main
+
+main()

@@ -1,0 +1,157 @@
+"""Versioned event schema for the round-level telemetry trace.
+
+A trace is a JSONL file: one JSON object per line, each carrying an
+``"ev"`` discriminator and a ``"v"`` schema version.  Five event kinds
+exist (see docs/telemetry.md for the field-by-field reference):
+
+``header``   trace metadata, written once at the top of the file;
+``stage``    one timed section of a round (the ``stage(...)`` context
+             manager) — canonical names: ``data``, ``sigma``,
+             ``matching``, ``power``, ``selection``, ``objective``,
+             ``local_grads``, ``aggregate``, ``eval``;
+``solver``   counters from one solver invocation (swap count, sweeps,
+             CCP iterations, GP steps, feasibility);
+``devices``  per-device arrays for one round: energy terms of
+             eqs. (16)-(18), selected/uploaded counts, mislabel
+             fraction among the selected samples;
+``round``    the round roll-up: wall-clock, net cost (eq. 18),
+             Delta_hat (eq. 26), feasibility.
+
+Events deliberately serialize to *flat* dicts of JSON scalars/lists so
+a trace can be consumed with nothing but ``json.loads`` per line.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+SCHEMA_VERSION = 1
+
+#: canonical stage names instrumented by the FEEL round loop; sinks
+#: accept any string so callers may add their own sections.
+CANONICAL_STAGES = ("data", "sigma", "matching", "power", "selection",
+                    "objective", "local_grads", "aggregate", "eval")
+
+#: the six stages every instrumented ``FEELTrainer.run_round`` emits.
+REQUIRED_STAGES = ("sigma", "matching", "power", "selection",
+                   "local_grads", "aggregate")
+
+
+@dataclasses.dataclass
+class StageEvent:
+    """One timed section: ``dur_s`` seconds starting ``t0_s`` after
+    trace creation (monotonic clock)."""
+
+    stage: str
+    t0_s: float
+    dur_s: float
+    round: Optional[int] = None
+
+    def to_record(self) -> Dict[str, Any]:
+        return {"ev": "stage", "v": SCHEMA_VERSION, "round": self.round,
+                "stage": self.stage, "t0_s": self.t0_s,
+                "dur_s": self.dur_s}
+
+
+@dataclasses.dataclass
+class SolverEvent:
+    """Counters from one solver call.
+
+    ``solver`` is ``matching`` (Alg. 2), ``power`` (Alg. 3 / closed
+    form) or ``selection`` (Algs. 4-5 / exact oracle); ``counters``
+    holds JSON scalars (ints, floats, bools, short strings).
+    """
+
+    solver: str
+    counters: Dict[str, Any]
+    round: Optional[int] = None
+
+    def to_record(self) -> Dict[str, Any]:
+        return {"ev": "solver", "v": SCHEMA_VERSION, "round": self.round,
+                "solver": self.solver, "counters": dict(self.counters)}
+
+
+@dataclasses.dataclass
+class DeviceEvent:
+    """Per-device accounting for one round; every list has length K.
+
+    ``energy_cmp_j`` is E^cmp_k (eq. 9), ``energy_com_j`` is E^com_k
+    (below eq. 16), ``cost`` is c_k (E^cmp_k + E^com_k) (eqs. 10+17),
+    ``reward`` is q_k |M_k| (eq. 7) — net cost (eq. 18) is
+    sum(cost) - sum(reward).
+    """
+
+    round: int
+    energy_cmp_j: List[float]
+    energy_com_j: List[float]
+    cost: List[float]
+    reward: List[float]
+    selected: List[int]
+    uploaded: List[int]
+    mislabel_frac: List[float]
+
+    def to_record(self) -> Dict[str, Any]:
+        return {"ev": "devices", "v": SCHEMA_VERSION, "round": self.round,
+                "energy_cmp_j": self.energy_cmp_j,
+                "energy_com_j": self.energy_com_j,
+                "cost": self.cost, "reward": self.reward,
+                "selected": self.selected, "uploaded": self.uploaded,
+                "mislabel_frac": self.mislabel_frac}
+
+
+@dataclasses.dataclass
+class RoundEvent:
+    """Round roll-up; ``wall_s`` covers the whole ``run_round`` call."""
+
+    round: int
+    wall_s: float
+    net_cost: float
+    delta_obj: float
+    n_selected: int
+    n_uploaded: int
+    feasible: bool
+    test_acc: Optional[float] = None
+
+    def to_record(self) -> Dict[str, Any]:
+        return {"ev": "round", "v": SCHEMA_VERSION, "round": self.round,
+                "wall_s": self.wall_s, "net_cost": self.net_cost,
+                "delta_obj": self.delta_obj,
+                "n_selected": self.n_selected,
+                "n_uploaded": self.n_uploaded, "feasible": self.feasible,
+                "test_acc": self.test_acc}
+
+
+def header_record(meta: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    return {"ev": "header", "v": SCHEMA_VERSION, "meta": dict(meta or {})}
+
+
+_KINDS = {
+    "stage": lambda r: StageEvent(stage=r["stage"], t0_s=r["t0_s"],
+                                  dur_s=r["dur_s"], round=r.get("round")),
+    "solver": lambda r: SolverEvent(solver=r["solver"],
+                                    counters=r["counters"],
+                                    round=r.get("round")),
+    "devices": lambda r: DeviceEvent(
+        round=r["round"], energy_cmp_j=r["energy_cmp_j"],
+        energy_com_j=r["energy_com_j"], cost=r["cost"],
+        reward=r["reward"], selected=r["selected"],
+        uploaded=r["uploaded"], mislabel_frac=r["mislabel_frac"]),
+    "round": lambda r: RoundEvent(
+        round=r["round"], wall_s=r["wall_s"], net_cost=r["net_cost"],
+        delta_obj=r["delta_obj"], n_selected=r["n_selected"],
+        n_uploaded=r["n_uploaded"], feasible=r["feasible"],
+        test_acc=r.get("test_acc")),
+}
+
+
+def parse_record(record: Dict[str, Any]):
+    """Dict (one JSONL line) -> typed event; header/unknown -> None.
+
+    Raises ``ValueError`` on a schema-version mismatch so readers fail
+    loudly instead of mis-aggregating a future trace format.
+    """
+    v = record.get("v", SCHEMA_VERSION)
+    if v != SCHEMA_VERSION:
+        raise ValueError(f"trace schema v{v} != reader v{SCHEMA_VERSION}")
+    make = _KINDS.get(record.get("ev"))
+    return make(record) if make else None

@@ -1,0 +1,207 @@
+"""Telemetry sinks.
+
+Two sinks share one interface:
+
+* ``NullTelemetry`` — the process-wide default.  Every method is a
+  cheap no-op (``stage`` hands back one shared, reusable null context
+  manager), so instrumented code paths cost a single attribute lookup
+  when telemetry is off and numerics are bit-for-bit unchanged.
+* ``Telemetry`` — records events in memory and, when given a ``path``,
+  streams them to a JSONL file line-by-line (partial traces survive a
+  crash).  ``stage(name)`` times a ``with`` block on the monotonic
+  clock; ``block`` calls ``jax.block_until_ready`` so device work is
+  attributed to the stage that launched it rather than to whichever
+  later stage happens to synchronize.
+
+Sink resolution: instrumented entry points take ``telemetry=None`` and
+call ``resolve`` — ``None`` means "use the process default" (set with
+``set_default``, a ``NullTelemetry`` unless e.g. ``benchmarks/run.py
+--trace`` installed a real sink).  Inner helpers that would flood the
+trace (the swap-matching scorer's per-candidate power solves) pass the
+``NULL`` sentinel explicitly to opt out.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Any, Dict, IO, Optional
+
+from . import events as ev
+
+
+class _NullStage:
+    """Shared reusable no-op context manager."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_STAGE = _NullStage()
+
+
+class NullTelemetry:
+    """Do-nothing sink; the interface contract for ``Telemetry``."""
+
+    enabled: bool = False
+    annotate: bool = False
+
+    def stage(self, name: str):
+        return _NULL_STAGE
+
+    def block(self, x):
+        return x
+
+    def begin_round(self, i: int) -> None:
+        pass
+
+    def solver(self, solver: str, **counters: Any) -> None:
+        pass
+
+    def devices(self, **fields: Any) -> None:
+        pass
+
+    def round_end(self, **fields: Any) -> None:
+        pass
+
+    def emit(self, event) -> None:
+        pass
+
+    def close(self) -> None:
+        pass
+
+
+#: explicit opt-out sentinel (see module docstring).
+NULL = NullTelemetry()
+
+
+class _TimedStage:
+    __slots__ = ("_tele", "_name", "_t0")
+
+    def __init__(self, tele: "Telemetry", name: str):
+        self._tele = tele
+        self._name = name
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        t1 = time.perf_counter()
+        tele = self._tele
+        tele.emit(ev.StageEvent(stage=self._name,
+                                t0_s=self._t0 - tele.created_s,
+                                dur_s=t1 - self._t0,
+                                round=tele.current_round))
+        return False
+
+
+class Telemetry(NullTelemetry):
+    """Recording sink (in-memory list + optional JSONL stream).
+
+    Parameters
+    ----------
+    path:
+        JSONL output file; ``None`` keeps events in memory only.
+    annotate:
+        ask ``FEELTrainer`` to wrap its jitted functions in
+        ``jax.profiler`` trace annotations (visible in TensorBoard /
+        Perfetto profiles; off by default — it renames traced
+        computations, which can perturb compilation caching).
+    meta:
+        free-form dict stored in the trace header.
+    """
+
+    enabled = True
+
+    def __init__(self, path: Optional[str] = None, annotate: bool = False,
+                 meta: Optional[Dict[str, Any]] = None):
+        self.annotate = annotate
+        self.created_s = time.perf_counter()
+        self.current_round: Optional[int] = None
+        self.events: list = []
+        self._file: Optional[IO[str]] = None
+        if path is not None:
+            self._file = open(path, "w")
+            self._write(ev.header_record(meta))
+
+    # -- recording -----------------------------------------------------
+    def stage(self, name: str):
+        return _TimedStage(self, name)
+
+    def block(self, x):
+        import jax
+
+        return jax.block_until_ready(x)
+
+    def begin_round(self, i: int) -> None:
+        self.current_round = i
+
+    def solver(self, solver: str, **counters: Any) -> None:
+        self.emit(ev.SolverEvent(solver=solver, counters=counters,
+                                 round=self.current_round))
+
+    def devices(self, **fields: Any) -> None:
+        self.emit(ev.DeviceEvent(round=self.current_round, **fields))
+
+    def round_end(self, **fields: Any) -> None:
+        self.emit(ev.RoundEvent(round=self.current_round, **fields))
+
+    def emit(self, event) -> None:
+        self.events.append(event)
+        if self._file is not None:
+            self._write(event.to_record())
+
+    # -- IO ------------------------------------------------------------
+    def _write(self, record: Dict[str, Any]) -> None:
+        self._file.write(json.dumps(record) + "\n")
+        self._file.flush()
+
+    def close(self) -> None:
+        if self._file is not None:
+            self._file.close()
+            self._file = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+# ---------------------------------------------------------------------
+# process-wide default sink
+# ---------------------------------------------------------------------
+
+_default: NullTelemetry = NULL
+
+
+def set_default(tele: Optional[NullTelemetry]) -> None:
+    """Install ``tele`` as the process default (``None`` resets)."""
+    global _default
+    _default = tele if tele is not None else NULL
+
+
+def get_default() -> NullTelemetry:
+    return _default
+
+
+def resolve(telemetry: Optional[NullTelemetry]) -> NullTelemetry:
+    """``None`` -> the process default; anything else passes through."""
+    return _default if telemetry is None else telemetry
+
+
+def annotate_fn(fn, name: str):
+    """Wrap ``fn`` in a ``jax.profiler`` trace annotation when the
+    running jax exposes one; otherwise return ``fn`` unchanged."""
+    try:
+        import jax.profiler
+
+        return jax.profiler.annotate_function(fn, name=name)
+    except Exception:  # pragma: no cover - profiler API unavailable
+        return fn

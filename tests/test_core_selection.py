@@ -4,7 +4,10 @@ import itertools
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional test extra; property tests skip
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import default_system, sample_round
 from repro.core import delta as delta_mod

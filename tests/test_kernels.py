@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional test extra; property tests skip
+    from _hypothesis_stub import given, settings, st
 
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention

@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional test extra; property tests skip
+    from _hypothesis_stub import given, settings, st
 
 from repro import optim
 from repro.checkpoint import load_pytree, save_pytree
