@@ -1,0 +1,220 @@
+"""Benchmark regression gate for the FEEL round loop.
+
+Runs the standard small configuration with full instrumentation
+(telemetry + metrics + convergence monitor + kernel profiling), writes
+``BENCH_feel_round.json`` — per-stage p50/p95 latencies, roofline
+utilization per stage, solver counters, and the Lemma-2 bound-gap
+ratio — and compares it against a committed baseline:
+
+    PYTHONPATH=src python -m benchmarks.regress                # gate
+    PYTHONPATH=src python -m benchmarks.regress --update-baseline
+    PYTHONPATH=src python -m benchmarks.regress --trace t.jsonl
+
+Exit status is nonzero on regression (CI runs this non-blocking; see
+.github/workflows/ci.yml ``bench-regress``).  What counts as a
+regression:
+
+* a stage's p50/p95 grew past ``--latency-tol`` x baseline (plus a
+  millisecond-scale absolute floor, so micro-stages don't flap);
+* a solver counter (swaps, CCP iterations, GP steps, infeasible calls)
+  grew past ``--counter-tol`` — these are deterministic for a fixed
+  seed, so growth means the algorithms are doing more work;
+* the bound-gap ratio (max observed gap / Lemma-2 predicted bound)
+  grew past ``--ratio-tol`` x baseline, or new bound violations
+  appeared — the implementation stopped tracking the theory.
+
+Latency comparisons exclude round 0 (jit compilation) and only fail on
+*increases*; a faster run always passes.  Refresh the baseline with
+``--update-baseline`` after an intentional change and commit the file.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import types
+from typing import Dict, List, Optional
+
+import numpy as np
+
+BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
+                        "BENCH_feel_round.json")
+
+#: the gate's fixed small config — change it only together with
+#: ``--update-baseline`` (the baseline records it and compare() refuses
+#: to diff across configs).
+CONFIG = {"K": 6, "N": 4, "Q": 2, "side": 8, "per_device": 50,
+          "d_hat": 16, "gp_steps": 50, "mislabel_prop": 0.1, "seed": 0}
+
+
+def run_gate(rounds: int = 12, trace_path: Optional[str] = None) -> Dict:
+    """Run the instrumented small config; return the BENCH record."""
+    import jax
+
+    from repro import obs
+    from repro.core import default_system
+    from repro.data import SyntheticImages, non_iid_split
+    from repro.fed import FEELConfig, FEELTrainer
+    from repro.models import cnn
+
+    c = CONFIG
+    train = SyntheticImages.make(c["per_device"] * c["K"], side=c["side"],
+                                 seed=0)
+    test = SyntheticImages.make(100, side=c["side"], seed=1)
+    data = non_iid_split(train, test, K=c["K"], per_device=c["per_device"],
+                         mislabel_prop=c["mislabel_prop"], seed=c["seed"])
+    sys_ = default_system(K=c["K"], N=c["N"], Q=c["Q"], D_hat=c["d_hat"])
+    cfg = FEELConfig(scheme="proposed", d_hat=c["d_hat"],
+                     gp_steps=c["gp_steps"], eval_every=max(rounds, 1),
+                     seed=c["seed"])
+    cc = cnn.CNNConfig(side=c["side"])
+    params = cnn.init(jax.random.PRNGKey(c["seed"]), cc)
+    model = types.SimpleNamespace(features=cnn.features, apply=cnn.apply,
+                                  loss_fn=cnn.loss_fn,
+                                  accuracy=cnn.accuracy)
+
+    reg = obs.Registry()
+    obs.metrics.set_default(reg)
+    tele = obs.Telemetry(path=trace_path, profile=True,
+                         meta={"source": "benchmarks.regress",
+                               "config": c, "rounds": rounds})
+    # straggler detection is wall-clock dependent; keep the gate's
+    # counters deterministic for a fixed seed by disabling it here.
+    mc = obs.MonitorConfig(beta=1.0, straggler_factor=float("inf"))
+    monitor = obs.ConvergenceMonitor(sys_, mc, telemetry=tele, registry=reg)
+    try:
+        trainer = FEELTrainer(sys_, data, model, params, cfg,
+                              telemetry=tele, monitor=monitor)
+        trainer.run(rounds)
+    finally:
+        obs.metrics.set_default(None)
+        tele.close()
+
+    # -- per-stage latencies, round 0 (compilation) excluded -----------
+    stage_durs: Dict[str, List[float]] = {}
+    for e in tele.events:
+        if isinstance(e, obs.StageEvent) and (e.round or 0) >= 1:
+            stage_durs.setdefault(e.stage, []).append(e.dur_s)
+    profiles = {e.stage: e for e in tele.events
+                if isinstance(e, obs.ProfileEvent)}
+    stages = {}
+    for name, durs in sorted(stage_durs.items()):
+        rec = {"calls": len(durs),
+               "p50_ms": float(np.percentile(durs, 50) * 1e3),
+               "p95_ms": float(np.percentile(durs, 95) * 1e3),
+               "total_s": float(np.sum(durs)),
+               "utilization": None}
+        prof = profiles.get(name)
+        if prof is not None and prof.peak_flops > 0:
+            mean_s = float(np.mean(durs))
+            rec["utilization"] = prof.flops / mean_s / prof.peak_flops
+            rec["flops"] = prof.flops
+            rec["bytes_accessed"] = prof.bytes_accessed
+        stages[name] = rec
+
+    # -- solver counters from the registry (deterministic per seed) ----
+    counters = {}
+    for fam in reg.snapshot():
+        if fam["type"] != "counter":
+            continue
+        for s in fam["samples"]:
+            labels = s.get("labels") or {}
+            key = fam["name"]
+            if labels:
+                key += "{" + ",".join(f"{k}={v}" for k, v in
+                                      sorted(labels.items())) + "}"
+            counters[key] = s["value"]
+
+    msum = monitor.summary()
+    return {"bench": "feel_round", "config": dict(c), "rounds": rounds,
+            "stages": stages, "solvers": counters,
+            "bound_gap_ratio": msum["bound_gap_ratio"],
+            "violations": msum["violations"]}
+
+
+def compare(cur: Dict, base: Dict, latency_tol: float = 1.75,
+            counter_tol: float = 0.10, ratio_tol: float = 1.5
+            ) -> List[str]:
+    """Return human-readable regression messages (empty = pass)."""
+    fails: List[str] = []
+    if cur.get("config") != base.get("config"):
+        return [f"config changed ({cur.get('config')} vs baseline "
+                f"{base.get('config')}) — rerun with --update-baseline"]
+
+    for name, b in base.get("stages", {}).items():
+        c = cur.get("stages", {}).get(name)
+        if c is None:
+            fails.append(f"stage {name!r} missing from current run")
+            continue
+        for q, floor_ms, tol in (("p50_ms", 1.0, latency_tol),
+                                 ("p95_ms", 2.0, latency_tol * 1.5)):
+            if c[q] > b[q] * tol + floor_ms:
+                fails.append(f"stage {name}.{q}: {c[q]:.2f}ms > "
+                             f"{tol:g}x baseline {b[q]:.2f}ms")
+
+    for key, bv in base.get("solvers", {}).items():
+        cv = cur.get("solvers", {}).get(key)
+        if cv is None:
+            fails.append(f"counter {key} missing from current run")
+        elif cv > bv * (1.0 + counter_tol) + 1e-9:
+            fails.append(f"counter {key}: {cv:g} > baseline {bv:g} "
+                         f"(+{counter_tol:.0%} tol)")
+
+    br, cr = base.get("bound_gap_ratio"), cur.get("bound_gap_ratio")
+    if br is not None and cr is not None and cr > br * ratio_tol + 0.05:
+        fails.append(f"bound_gap_ratio: {cr:.3f} > {ratio_tol:g}x "
+                     f"baseline {br:.3f}")
+    bviol = (base.get("violations") or {}).get("bound_violation", 0)
+    cviol = (cur.get("violations") or {}).get("bound_violation", 0)
+    if cviol > bviol:
+        fails.append(f"bound violations: {cviol} > baseline {bviol}")
+    return fails
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--rounds", type=int, default=12)
+    ap.add_argument("--out", default="BENCH_feel_round.json")
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="write the baseline instead of comparing")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="also write the telemetry JSONL trace")
+    ap.add_argument("--latency-tol", type=float, default=1.75)
+    ap.add_argument("--counter-tol", type=float, default=0.10)
+    ap.add_argument("--ratio-tol", type=float, default=1.5)
+    args = ap.parse_args(argv)
+
+    cur = run_gate(rounds=args.rounds, trace_path=args.trace)
+    with open(args.out, "w") as f:
+        json.dump(cur, f, indent=1, sort_keys=True)
+    print(f"wrote {args.out}")
+
+    if args.update_baseline:
+        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+        with open(args.baseline, "w") as f:
+            json.dump(cur, f, indent=1, sort_keys=True)
+        print(f"baseline refreshed -> {args.baseline}")
+        return
+
+    if not os.path.exists(args.baseline):
+        print(f"no baseline at {args.baseline}; run with "
+              f"--update-baseline to create one", file=sys.stderr)
+        sys.exit(2)
+    with open(args.baseline) as f:
+        base = json.load(f)
+    fails = compare(cur, base, latency_tol=args.latency_tol,
+                    counter_tol=args.counter_tol,
+                    ratio_tol=args.ratio_tol)
+    for msg in fails:
+        print(f"REGRESSION: {msg}", file=sys.stderr)
+    if fails:
+        sys.exit(1)
+    print(f"PASS: no regression vs {args.baseline} "
+          f"({len(base.get('stages', {}))} stages, "
+          f"{len(base.get('solvers', {}))} counters)")
+
+
+if __name__ == "__main__":
+    main()

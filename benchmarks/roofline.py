@@ -3,6 +3,13 @@
 Reads experiments/dryrun.jsonl, keeps the latest record per
 (arch, shape, mesh, variant), prints the three roofline terms, the
 bottleneck, and MODEL_FLOPS/HLO_FLOPs usefulness ratio.
+
+``--trace PATH`` switches to the measured FEEL roofline: reads a
+repro.obs JSONL trace recorded with ``Telemetry(profile=True)`` and
+prints one ``roofline_feel_<stage>`` row per profiled kernel — HLO
+FLOPs/bytes per call, arithmetic intensity, achieved GFLOP/s and
+achieved/peak utilization (schema v2 ``profile`` events joined against
+that stage's mean wall-clock).
 """
 from __future__ import annotations
 
@@ -68,6 +75,26 @@ def run():
                  f"useful={r.get('useful_ratio') or 0:.2f}")
 
 
+def run_trace(path: str) -> None:
+    """Measured FEEL roofline rows from a profile-enabled trace."""
+    from repro import obs
+
+    s = obs.summarize(obs.load_trace(path))
+    rl = s.roofline()
+    if not rl:
+        emit("roofline_feel", 0.0,
+             "no profile events (record with Telemetry(profile=True))")
+        return
+    for stage, r in sorted(rl.items()):
+        ai = (r["flops"] / r["bytes_accessed"]
+              if r["bytes_accessed"] > 0 else 0.0)
+        emit(f"roofline_feel_{stage}", r["per_call_s"] * 1e6,
+             f"kernel={r['kernel']};flops={r['flops']:.3e};"
+             f"bytes={r['bytes_accessed']:.3e};intensity={ai:.2f};"
+             f"achieved_gflops={r['achieved_flops_per_s'] / 1e9:.2f};"
+             f"util={r['utilization']:.4f}")
+
+
 def markdown_table(mesh: str = "16x16", variant: str = "baseline") -> str:
     """Render §Roofline markdown (used to build EXPERIMENTS.md)."""
     recs = load()
@@ -89,4 +116,15 @@ def markdown_table(mesh: str = "16x16", variant: str = "baseline") -> str:
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="repro.obs JSONL trace (profile=True) to render "
+                         "instead of the dryrun records")
+    a = ap.parse_args()
+    print("name,us_per_call,derived")
+    if a.trace:
+        run_trace(a.trace)
+    else:
+        run()

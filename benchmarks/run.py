@@ -6,6 +6,9 @@ report.  Prints ``name,us_per_call,derived`` CSV.
     PYTHONPATH=src python -m benchmarks.run --trace t.jsonl
                           # + record a repro.obs telemetry trace and
                           #   append its telemetry.* rows to the CSV
+    PYTHONPATH=src python -m benchmarks.run --metrics m.prom
+                          # + install a process-wide metrics registry and
+                          #   write its Prometheus exposition at the end
 """
 from __future__ import annotations
 
@@ -24,9 +27,13 @@ def main() -> None:
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="write a repro.obs JSONL telemetry trace and "
                          "append its summary rows to the CSV output")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="install a process-wide metrics registry and "
+                         "write its Prometheus exposition to PATH")
     args = ap.parse_args()
 
     tele = None
+    reg = None
     if args.trace:
         from repro import obs
 
@@ -34,6 +41,11 @@ def main() -> None:
                              meta={"source": "benchmarks.run",
                                    "argv": sys.argv[1:]})
         obs.set_default(tele)
+    if args.metrics:
+        from repro import obs
+
+        reg = obs.Registry()
+        obs.metrics.set_default(reg)
 
     from . import (alg1_latency, fig3_ccp_convergence, fig4_convergence_cost,
                    fig5_mislabel, fig6_availability, lemma3_bound, roofline)
@@ -70,6 +82,13 @@ def main() -> None:
         obs.set_default(None)
         tele.close()
         obs.emit_summary(obs.summarize(tele.events))
+    if reg is not None:
+        from repro import obs
+
+        obs.metrics.set_default(None)
+        with open(args.metrics, "w") as f:
+            f.write(reg.render())
+        print(f"metrics exposition -> {args.metrics}", file=sys.stderr)
     if failed:
         sys.exit(1)
 

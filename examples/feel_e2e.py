@@ -34,6 +34,13 @@ def main():
                     help="write a repro.obs JSONL telemetry trace "
                          "(per-round stage timings, solver counters, "
                          "per-device energy) and print its summary")
+    ap.add_argument("--monitor", action="store_true",
+                    help="attach a ConvergenceMonitor checking each round "
+                         "against the paper's Lemma-2 bound; print its "
+                         "summary (violations go to --trace if given)")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="install a process-wide metrics registry and "
+                         "write its Prometheus exposition to PATH")
     args = ap.parse_args()
 
     train = SyntheticImages.make(6000, side=args.side, seed=0)
@@ -54,7 +61,15 @@ def main():
                              meta={"source": "examples.feel_e2e",
                                    "scheme": args.scheme,
                                    "rounds": args.rounds})
-    trainer = FEELTrainer(sys_, data, model, params, cfg, telemetry=tele)
+    reg = None
+    if args.metrics:
+        reg = obs.Registry()
+        obs.metrics.set_default(reg)
+    monitor = None
+    if args.monitor:
+        monitor = obs.ConvergenceMonitor(sys_, telemetry=tele, registry=reg)
+    trainer = FEELTrainer(sys_, data, model, params, cfg, telemetry=tele,
+                          monitor=monitor)
     metrics = trainer.run(args.rounds, verbose=True)
     final = [m for m in metrics if m.test_acc is not None][-1]
     print(f"\nFINAL: acc={final.test_acc:.3f} "
@@ -64,6 +79,16 @@ def main():
         print(f"\ntelemetry trace -> {args.trace}")
         print("name,us_per_call,derived")
         obs.emit_summary(obs.summarize(tele.events))
+    if monitor is not None:
+        s = monitor.summary()
+        print(f"\nmonitor: rounds={s['rounds']} "
+              f"bound_gap_ratio={s['bound_gap_ratio']:.3f} "
+              f"violations={s['violations'] or '{}'}")
+    if reg is not None:
+        obs.metrics.set_default(None)
+        with open(args.metrics, "w") as f:
+            f.write(reg.render())
+        print(f"metrics exposition -> {args.metrics}")
     if args.out:
         with open(args.out, "w") as f:
             json.dump([m.__dict__ for m in metrics], f)

@@ -1,12 +1,16 @@
 """Convergence-bound utilities (paper Lemmas 1-3).
 
-These make the theory executable so tests/benchmarks can check that the
-implementation satisfies the paper's analytical claims:
+These make the theory executable so tests/benchmarks/monitors can
+check that the implementation satisfies the paper's analytical claims:
 
 * ``aggregate`` — eq. (19), inverse-propensity-weighted aggregation;
   Lemma 1: E[g_hat] = grad L(w).
-* ``one_round_bound`` — RHS of Lemma 2 for observed quantities.
-* ``multi_round_bound`` — Lemma 3's product-form upper bound.
+* ``one_round_bound`` — RHS of Lemma 2 for observed quantities
+  (``one_round_bound_from_delta`` when the Delta term is already in
+  hand, e.g. the round decision's ``delta_obj``).
+* ``multi_round_bound`` — Lemma 3's product-form upper bound,
+  vectorized with cumulative products; ``multi_round_bound_ref`` is
+  the direct O(i^2) transcription kept as the test oracle.
 """
 from __future__ import annotations
 
@@ -31,19 +35,55 @@ def aggregate(sys: SystemParams, local_grads: Array, alpha: Array) -> Array:
     return jnp.einsum("k,kp->p", w, local_grads) / sys.D_hat_total
 
 
+def one_round_bound_from_delta(sys: SystemParams, gap_i: Array,
+                               g_norm_sq: Array, eta: Array, beta: Array,
+                               d_term: Array) -> Array:
+    """Lemma 2 RHS with the Delta(delta) term already evaluated
+    (eq. (22)/(26) — the round decision's ``delta_obj``)."""
+    return (gap_i - eta * g_norm_sq
+            + beta * eta ** 2 / (2.0 * sys.D_hat_total ** 2) * d_term)
+
+
 def one_round_bound(sys: SystemParams, gap_i: Array, g_norm_sq: Array,
                     eta: Array, beta: Array, dlt: Array,
                     sigma: Array) -> Array:
     """Lemma 2 RHS: E[L(w+) - L*] <= gap - eta ||g||^2 + (beta eta^2 / 2|D̂|^2) Delta."""
     d_term = delta_mod.delta(sys, dlt, sigma)
-    return (gap_i - eta * g_norm_sq
-            + beta * eta ** 2 / (2.0 * sys.D_hat_total ** 2) * d_term)
+    return one_round_bound_from_delta(sys, gap_i, g_norm_sq, eta, beta,
+                                      d_term)
 
 
 def multi_round_bound(sys: SystemParams, gap_1: float, mu: float,
                       beta: float, etas: Sequence[float],
                       deltas: Sequence[float]) -> float:
-    """Lemma 3: product contraction + weighted Delta accumulation."""
+    """Lemma 3: product contraction + weighted Delta accumulation.
+
+    Vectorized: with f_j = 1 - 2 mu eta_j the coefficient of round t's
+    Delta term is the *suffix* product a_t = prod_{j>t} f_j, computed
+    for every t at once from one reversed ``jnp.cumprod``; the scalar
+    transcription lives on as ``multi_round_bound_ref`` (test oracle).
+    """
+    if len(etas) != len(deltas):
+        raise ValueError("etas and deltas must have equal length")
+    if len(etas) == 0:
+        return float(gap_1)
+    etas_a = jnp.asarray(etas)
+    deltas_a = jnp.asarray(deltas)
+    f = 1.0 - 2.0 * mu * etas_a                       # (i,)
+    # suffix[t] = prod_{j>t} f_j ; suffix[i-1] = 1, full product = f[0]*suffix[0]
+    rev = jnp.cumprod(f[::-1])[::-1]                  # rev[t] = prod_{j>=t} f_j
+    suffix = jnp.concatenate([rev[1:], jnp.ones((1,), rev.dtype)])
+    acc = jnp.sum(suffix * etas_a ** 2 * deltas_a)
+    prod = rev[0]
+    return (float(prod) * gap_1
+            + beta / (2.0 * float(sys.D_hat_total) ** 2) * float(acc))
+
+
+def multi_round_bound_ref(sys: SystemParams, gap_1: float, mu: float,
+                          beta: float, etas: Sequence[float],
+                          deltas: Sequence[float]) -> float:
+    """Direct O(i^2) transcription of Lemma 3 (oracle for the
+    vectorized ``multi_round_bound``)."""
     i = len(etas)
     prod = 1.0
     for eta in etas:

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .. import obs
+from ..obs import metrics as metrics_mod
 from . import cost as cost_mod
 from . import delta as delta_mod
 from . import matching as matching_mod
@@ -52,6 +53,14 @@ def _finish(sys: SystemParams, rho, p, delta, state: RoundState,
         nc = float(cost_mod.net_cost(sys, rho_j, p_j, n_sel))
         dv = float(delta_mod.delta(sys, delta_j, state.sigma))
         obj = float(sys.lam) * dv + (1.0 - float(sys.lam)) * nc
+    reg = metrics_mod.get_default()
+    if reg.enabled:
+        reg.counter("feel_decisions_total",
+                    "round decisions evaluated (eq. 18 + eq. 26)").inc()
+        reg.gauge("feel_decision_net_cost",
+                  "net cost (eq. 18) of the last round decision").set(nc)
+        reg.gauge("feel_decision_delta_obj",
+                  "Delta_hat (eq. 26) of the last round decision").set(dv)
     return RoundDecision(rho=np.asarray(rho), p=np.asarray(p),
                          delta=np.asarray(delta), net_cost=nc, delta_obj=dv,
                          objective=obj, feasible=feasible, swaps=swaps)

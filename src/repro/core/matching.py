@@ -30,6 +30,7 @@ from typing import Optional
 import numpy as np
 
 from .. import obs
+from ..obs import metrics as metrics_mod
 from . import power as power_mod
 from .types import SystemParams
 
@@ -196,9 +197,26 @@ def swap_matching(sys: SystemParams, h, alpha, evaluator: str = "closed_form",
         p = tele.block(p)
     all_matched = bool(np.all(assign[avail] >= 0)) if avail.size else True
     feasible = ok and all_matched and np.isfinite(cost)
+    unmatched = int(np.sum(~matched[avail])) if avail.size else 0
     tele.solver("matching", swaps=swaps, sweeps=sweeps,
-                rb_evals=scorer.evals, unmatched=int(np.sum(~matched[avail]))
-                if avail.size else 0, feasible=bool(feasible))
+                rb_evals=scorer.evals, unmatched=unmatched,
+                feasible=bool(feasible))
+    reg = metrics_mod.get_default()
+    if reg.enabled:
+        reg.counter("feel_matching_calls_total",
+                    "swap-matching (Alg. 2) invocations").inc()
+        reg.counter("feel_matching_swaps_total",
+                    "accepted swap/move operations").inc(swaps)
+        reg.counter("feel_matching_sweeps_total",
+                    "swap sweeps over available devices").inc(sweeps)
+        reg.counter("feel_matching_rb_evals_total",
+                    "candidate per-RB power evaluations").inc(scorer.evals)
+        reg.counter("feel_matching_unmatched_total",
+                    "available devices left without an RB").inc(unmatched)
+        if not feasible:
+            reg.counter("feel_solver_infeasible_total",
+                        "infeasible solver outcomes by solver").inc(
+                            1, solver="matching")
     return MatchingResult(assign=assign, rho=rho, p=np.asarray(p),
                           cost=cost, swaps=swaps, sweeps=sweeps,
                           feasible=feasible)

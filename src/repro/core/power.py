@@ -35,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .. import obs
+from ..obs import metrics as metrics_mod
 from .types import SystemParams
 
 Array = jax.Array
@@ -227,6 +228,7 @@ def allocate_power(sys: SystemParams, rho: Array, h: Array, alpha: Array,
         ok = bool(jnp.all(feas))
         cost = float(_upload_cost(sys, p, rho)) if ok else float("inf")
         tele.solver("power", method=method, feasible=ok)
+        _count_power(method, ok, 0)
         return p, cost, ok
     if method == "ccp":
         res = ccp_power(sys, rho, h, alpha)
@@ -234,5 +236,25 @@ def allocate_power(sys: SystemParams, rho: Array, h: Array, alpha: Array,
             else float("inf")
         tele.solver("power", method=method, iterations=res.iterations,
                     feasible=bool(res.feasible))
+        _count_power(method, bool(res.feasible), res.iterations)
         return res.p, cost, res.feasible
     raise ValueError(f"unknown power method: {method}")
+
+
+def _count_power(method: str, feasible: bool, ccp_iterations: int) -> None:
+    """Metrics for one ``allocate_power`` call.  Counters aggregate, so
+    (unlike trace events) the matching scorer's per-candidate solves
+    are counted too — that is the point of the infeasible-call metric.
+    """
+    reg = metrics_mod.get_default()
+    if not reg.enabled:
+        return
+    reg.counter("feel_power_calls_total",
+                "power allocations by method").inc(1, method=method)
+    if ccp_iterations:
+        reg.counter("feel_power_ccp_iterations_total",
+                    "CCP (Alg. 3) outer iterations").inc(ccp_iterations)
+    if not feasible:
+        reg.counter("feel_solver_infeasible_total",
+                    "infeasible solver outcomes by solver").inc(
+                        1, solver="power")

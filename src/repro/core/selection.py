@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from .. import obs
+from ..obs import metrics as metrics_mod
 from . import delta as delta_mod
 from .types import SystemParams
 
@@ -168,17 +169,28 @@ def solve_selection(sys: SystemParams, sigma: Array, mask: Array,
                     method: str = "faithful", steps: int = 400,
                     step0: float = 0.3, telemetry=None) -> Array:
     tele = obs.resolve(telemetry)
+    reg = metrics_mod.get_default()
     if method == "faithful":
         out = faithful_selection(sys, sigma, mask, steps=steps,
                                  step0=step0)
-        if tele.enabled:
-            tele.solver("selection", method=method, gp_steps=steps,
-                        n_selected=int(jnp.sum(out)))
-        return out
-    if method == "exact":
+        gp_steps = steps
+    elif method == "exact":
         out = exact_selection(sys, sigma, mask)
+        gp_steps = 0
+    else:
+        raise ValueError(f"unknown selection method: {method}")
+    if tele.enabled or reg.enabled:
+        # one host sync, shared by the trace event and the metrics
+        n_selected = int(jnp.sum(out))
         if tele.enabled:
-            tele.solver("selection", method=method, gp_steps=0,
-                        n_selected=int(jnp.sum(out)))
-        return out
-    raise ValueError(f"unknown selection method: {method}")
+            tele.solver("selection", method=method, gp_steps=gp_steps,
+                        n_selected=n_selected)
+        if reg.enabled:
+            reg.counter("feel_selection_calls_total",
+                        "data-selection solves by method").inc(
+                            1, method=method)
+            reg.counter("feel_selection_gp_steps_total",
+                        "gradient-projection (Alg. 4) steps").inc(gp_steps)
+            reg.counter("feel_selection_selected_total",
+                        "samples selected across rounds").inc(n_selected)
+    return out

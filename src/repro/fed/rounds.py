@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .. import obs, optim
+from ..obs import metrics as metrics_mod
 from ..core import cost as cost_mod
 from ..core import joint as joint_mod
 from ..core.types import RoundState, SystemParams
@@ -69,12 +70,20 @@ class FEELTrainer:
 
     def __init__(self, sys: SystemParams, data: FederatedDataset,
                  model, params, cfg: FEELConfig,
-                 telemetry: Optional[obs.NullTelemetry] = None):
+                 telemetry: Optional[obs.NullTelemetry] = None,
+                 monitor: Optional["obs.ConvergenceMonitor"] = None):
         """``model`` exposes features(params, x), apply, loss_fn, accuracy.
 
         ``telemetry``: an ``obs`` sink for the round-level trace; the
         default (``None``) resolves to the process-wide sink, which is
         a no-op unless e.g. ``benchmarks/run.py --trace`` installed one.
+
+        ``monitor``: an ``obs.ConvergenceMonitor`` fed one observation
+        per round (training-loss gap proxy, ||g_hat||^2, step size, the
+        decision's Delta term, wall/stage timings).  ``None`` (default)
+        skips every monitor code path — round outputs stay bit-for-bit
+        identical.  Metrics flow to the process-default registry
+        (``obs.metrics.set_default``), also a no-op unless installed.
         """
         self.sys = sys
         self.data = data
@@ -82,6 +91,8 @@ class FEELTrainer:
         self.params = params
         self.cfg = cfg
         self.obs = obs.resolve(telemetry)
+        self.monitor = monitor
+        self._profiled: set = set()
         self.rng = np.random.default_rng(cfg.seed)
         self.key = jax.random.PRNGKey(cfg.seed)
         opt_builder = {"adam": optim.adam, "sgd": optim.sgd,
@@ -158,11 +169,15 @@ class FEELTrainer:
         sys, cfg, tele = self.sys, self.cfg, self.obs
         t_round = time.perf_counter()
         tele.begin_round(i)
+        ev0 = len(tele.events) if tele.enabled else 0
 
         with tele.stage("data"):
             images, labels, true = self._gather_round_batches()
         self.key, kh, ka, kb = jax.random.split(self.key, 4)
 
+        if tele.profile:
+            self._profile_once("sigma_all", "sigma", self._sigma_all,
+                               (self.params, images, labels), tele, i)
         with tele.stage("sigma"):
             sigma = tele.block(self._sigma_all(self.params, images, labels))
         h = jax.random.exponential(kh, (sys.K, sys.N)) * 1e-5
@@ -198,6 +213,25 @@ class FEELTrainer:
         matched = jnp.asarray(dec.rho.sum(axis=1) > 0, jnp.float32)
         uploaded = alpha * matched
 
+        gap_proxy = None
+        if self.monitor is not None:
+            # mean training loss on the round batch under the PRE-update
+            # params: the Lemma-2 gap proxy (L* offset cancels, see
+            # repro.obs.monitor).  Read-only — numerics are untouched.
+            flat_im = images.reshape((-1,) + images.shape[2:])
+            gap_proxy = float(self.model.loss_fn(self.params, flat_im,
+                                                 labels.reshape(-1)))
+
+        if tele.profile:
+            if cfg.local_steps > 1:
+                self._profile_once(
+                    "local_deltas", "local_grads", self._local_deltas,
+                    (self.params, images, labels, delta,
+                     jnp.asarray(cfg.lr)), tele, i)
+            else:
+                self._profile_once(
+                    "local_grads", "local_grads", self._local_grads,
+                    (self.params, images, labels, delta), tele, i)
         with tele.stage("local_grads"):
             if cfg.local_steps > 1:
                 grads = self._local_deltas(self.params, images, labels,
@@ -207,8 +241,12 @@ class FEELTrainer:
                                           delta)
             grads = tele.block(grads)
 
+        g_norm_sq = None
         with tele.stage("aggregate"):
             g_hat = server_mod.aggregate_gradients(sys, grads, uploaded)
+            if self.monitor is not None:
+                g_norm_sq = float(sum(jnp.vdot(x, x)
+                                      for x in jax.tree.leaves(g_hat)))
             updates, self.opt_state = self.opt.update(g_hat, self.opt_state,
                                                       self.params)
             self.params = tele.block(optim.apply_updates(self.params,
@@ -225,10 +263,28 @@ class FEELTrainer:
                     self.data.test_labels))
         self._cum = getattr(self, "_cum", 0.0) + dec.net_cost
         n_uploaded = int(np.sum(np.asarray(uploaded)))
-        if tele.enabled:
-            self._record_round(tele, dec, sel, mislabeled,
-                               np.asarray(uploaded), acc,
-                               time.perf_counter() - t_round)
+        reg = metrics_mod.get_default()
+        wall_s = time.perf_counter() - t_round
+        if tele.enabled or reg.enabled:
+            e_cmp, e_com = self._energy_terms(dec)
+            if tele.enabled:
+                self._record_round(tele, dec, sel, mislabeled,
+                                   np.asarray(uploaded), acc, wall_s,
+                                   e_cmp, e_com)
+            if reg.enabled:
+                self._record_metrics(reg, dec, e_cmp, e_com,
+                                     int(np.sum(sel)), n_uploaded, wall_s)
+            if tele.enabled and reg.enabled:
+                tele.emit(reg.snapshot_event(round=i))
+        if self.monitor is not None:
+            stage_s = None
+            if tele.enabled:
+                stage_s = {e.stage: e.dur_s for e in tele.events[ev0:]
+                           if isinstance(e, obs.StageEvent)}
+            self.monitor.observe_round(
+                i, gap=gap_proxy, g_norm_sq=g_norm_sq, eta=cfg.lr,
+                delta_obj=float(dec.delta_obj), wall_s=wall_s,
+                stage_s=stage_s)
         return RoundMetrics(round=i, net_cost=dec.net_cost,
                             cum_net_cost=self._cum,
                             delta_obj=dec.delta_obj,
@@ -236,17 +292,35 @@ class FEELTrainer:
                             n_uploaded=n_uploaded,
                             frac_mislabeled_selected=frac_bad, test_acc=acc)
 
+    def _profile_once(self, name: str, stage: str, fn, args, tele,
+                      round_i: int) -> None:
+        """Record one roofline ``ProfileEvent`` per (kernel, shapes)."""
+        shapes = tuple(tuple(getattr(x, "shape", ()))
+                       for x in jax.tree.leaves(args))
+        key = (name, shapes)
+        if key in self._profiled:
+            return
+        self._profiled.add(key)
+        obs.profile_jitted(fn, args, name=name, stage=stage,
+                           telemetry=tele, round=round_i)
+
+    def _energy_terms(self, dec):
+        """Per-device E^cmp (eq. 9) and E^com (eq. 16) for the chosen
+        decision, as float64 numpy arrays."""
+        rho_j = jnp.asarray(dec.rho, jnp.float32)
+        p_j = jnp.asarray(dec.p, jnp.float32)
+        e_cmp = np.asarray(cost_mod.energy_compute(self.sys), np.float64)
+        e_com = np.asarray(cost_mod.energy_upload(self.sys, rho_j, p_j),
+                           np.float64)
+        return e_cmp, e_com
+
     def _record_round(self, tele, dec, sel: np.ndarray,
                       mislabeled: np.ndarray, uploaded: np.ndarray,
-                      acc, wall_s: float) -> None:
+                      acc, wall_s: float, e_cmp: np.ndarray,
+                      e_com: np.ndarray) -> None:
         """Emit the per-device (eqs. 16-18 terms) and round roll-up
         telemetry events.  Only called when the sink is enabled."""
         sys = self.sys
-        rho_j = jnp.asarray(dec.rho, jnp.float32)
-        p_j = jnp.asarray(dec.p, jnp.float32)
-        e_cmp = np.asarray(cost_mod.energy_compute(sys), np.float64)
-        e_com = np.asarray(cost_mod.energy_upload(sys, rho_j, p_j),
-                           np.float64)
         c = np.asarray(sys.c, np.float64)
         q = np.asarray(sys.q, np.float64)
         m_k = sel.sum(axis=1)
@@ -265,6 +339,33 @@ class FEELTrainer:
                        n_uploaded=int(uploaded.sum()),
                        feasible=bool(dec.feasible),
                        test_acc=None if acc is None else float(acc))
+
+    def _record_metrics(self, reg, dec, e_cmp: np.ndarray,
+                        e_com: np.ndarray, n_selected: int,
+                        n_uploaded: int, wall_s: float) -> None:
+        """Per-round budget/outcome metrics (eqs. 16-18).  Only called
+        when a real registry is installed."""
+        reg.counter("feel_rounds_total", "completed FEEL rounds").inc()
+        if not dec.feasible:
+            reg.counter("feel_rounds_infeasible_total",
+                        "rounds whose decision was infeasible").inc()
+        reg.histogram("feel_round_wall_seconds",
+                      "wall-clock per FEEL round").observe(wall_s)
+        reg.counter("feel_energy_compute_joules_total",
+                    "E^cmp (eq. 9) summed over devices and rounds").inc(
+                        float(e_cmp.sum()))
+        reg.counter("feel_energy_upload_joules_total",
+                    "E^com (eq. 16) summed over devices and rounds").inc(
+                        float(e_com.sum()))
+        reg.counter("feel_samples_selected_total",
+                    "samples selected for training").inc(n_selected)
+        reg.counter("feel_samples_uploaded_total",
+                    "device uploads aggregated").inc(n_uploaded)
+        reg.gauge("feel_cum_net_cost",
+                  "cumulative net cost (eq. 18) so far").set(self._cum)
+        reg.gauge("feel_time_budget_seconds",
+                  "per-round upload latency budget T (eq. 16)").set(
+                      float(self.sys.T))
 
     def run(self, rounds: int, verbose: bool = False) -> List[RoundMetrics]:
         out = []

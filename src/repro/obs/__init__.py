@@ -2,10 +2,18 @@
 
 Where does a round's wall-clock and cost actually go — swap matching,
 CCP power allocation, gradient-projection selection, the local
-gradients themselves?  This package answers that with a versioned JSONL
-trace (``events``), a sink with a zero-overhead no-op default
-(``trace``) and an aggregator that rolls a trace into the benchmark CSV
-format (``summary``).  See docs/telemetry.md.
+gradients themselves — and does the run still *obey the theory*?  This
+package answers with four layers (see docs/telemetry.md):
+
+* ``events``/``trace`` — a versioned JSONL trace and a sink with a
+  zero-overhead no-op default;
+* ``metrics`` — a process-wide counter/gauge/histogram registry with a
+  Prometheus text exposition (``python -m repro.obs.metrics trace``);
+* ``monitor`` — a ``ConvergenceMonitor`` checking observed optimality
+  gaps against the paper's Lemma 2/3 bounds and flagging divergence
+  and straggler rounds;
+* ``profile`` — per-jitted-kernel FLOPs/bytes (roofline) recorded once
+  per compilation, joined against stage wall-clock by ``summary``.
 
 Typical use::
 
@@ -20,11 +28,19 @@ Typical use::
 or process-wide (what ``benchmarks/run.py --trace`` does)::
 
     obs.set_default(obs.Telemetry(path="trace.jsonl"))
+    obs.metrics.set_default(obs.Registry())
 """
-from . import events, summary, trace  # noqa: F401
+from . import events, metrics, monitor, profile, summary, trace  # noqa: F401
 from .events import (CANONICAL_STAGES, REQUIRED_STAGES,  # noqa: F401
-                     SCHEMA_VERSION, DeviceEvent, RoundEvent, SolverEvent,
+                     SCHEMA_VERSION, DeviceEvent, MetricsEvent,
+                     MonitorEvent, ProfileEvent, RoundEvent, SolverEvent,
                      StageEvent, parse_record)
+from .metrics import (NullRegistry, Registry,  # noqa: F401
+                      render_snapshot)
+from .monitor import (ConvergenceMonitor, MonitorConfig,  # noqa: F401
+                      Violation)
+from .profile import (KernelProfile, cost_of, peak_flops,  # noqa: F401
+                      profile_jitted)
 from .summary import load_trace, rows, summarize  # noqa: F401
 from .summary import emit as emit_summary  # noqa: F401
 from .trace import (NULL, NullTelemetry, Telemetry, annotate_fn,  # noqa: F401
@@ -33,7 +49,11 @@ from .trace import (NULL, NullTelemetry, Telemetry, annotate_fn,  # noqa: F401
 __all__ = [
     "SCHEMA_VERSION", "CANONICAL_STAGES", "REQUIRED_STAGES",
     "StageEvent", "SolverEvent", "DeviceEvent", "RoundEvent",
+    "MetricsEvent", "MonitorEvent", "ProfileEvent",
     "parse_record", "NullTelemetry", "Telemetry", "NULL",
     "set_default", "get_default", "resolve", "annotate_fn",
+    "NullRegistry", "Registry", "render_snapshot",
+    "ConvergenceMonitor", "MonitorConfig", "Violation",
+    "KernelProfile", "cost_of", "peak_flops", "profile_jitted",
     "load_trace", "summarize", "rows", "emit_summary",
 ]

@@ -1,7 +1,7 @@
 """Versioned event schema for the round-level telemetry trace.
 
 A trace is a JSONL file: one JSON object per line, each carrying an
-``"ev"`` discriminator and a ``"v"`` schema version.  Five event kinds
+``"ev"`` discriminator and a ``"v"`` schema version.  Eight event kinds
 exist (see docs/telemetry.md for the field-by-field reference):
 
 ``header``   trace metadata, written once at the top of the file;
@@ -17,6 +17,17 @@ exist (see docs/telemetry.md for the field-by-field reference):
 ``round``    the round roll-up: wall-clock, net cost (eq. 18),
              Delta_hat (eq. 26), feasibility.
 
+Schema v2 adds (all three optional — v1 traces remain readable):
+
+``metrics``  a snapshot of the process metrics registry
+             (``repro.obs.metrics``): counters, gauges, histograms;
+``monitor``  one structured warning from the convergence monitor
+             (``repro.obs.monitor``): Lemma-2 bound violation, gap
+             divergence, or straggler round/stage;
+``profile``  per-jitted-function roofline numbers recorded once per
+             compilation (``repro.obs.profile``): HLO FLOPs, bytes
+             accessed, estimated peak FLOP/s.
+
 Events deliberately serialize to *flat* dicts of JSON scalars/lists so
 a trace can be consumed with nothing but ``json.loads`` per line.
 """
@@ -25,7 +36,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Optional
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 #: canonical stage names instrumented by the FEEL round loop; sinks
 #: accept any string so callers may add their own sections.
@@ -121,6 +132,77 @@ class RoundEvent:
                 "test_acc": self.test_acc}
 
 
+@dataclasses.dataclass
+class MetricsEvent:
+    """Snapshot of a metrics registry (new in schema v2).
+
+    ``families`` is the list produced by ``Registry.snapshot()``: one
+    dict per metric family with ``name``, ``type``, ``help`` and
+    ``samples`` (plus ``bucket_bounds`` for histograms).  Counters are
+    cumulative, so the *last* metrics event in a trace carries the
+    whole run's totals.
+    """
+
+    families: List[Dict[str, Any]]
+    round: Optional[int] = None
+
+    def to_record(self) -> Dict[str, Any]:
+        return {"ev": "metrics", "v": SCHEMA_VERSION, "round": self.round,
+                "families": list(self.families)}
+
+
+@dataclasses.dataclass
+class MonitorEvent:
+    """One structured convergence-monitor warning (new in schema v2).
+
+    ``kind`` is ``bound_violation`` (observed gap exceeded the Lemma-2
+    one-round bound), ``gap_divergence`` (gap increased monotonically
+    over the monitor's window) or ``straggler`` (round or stage wall
+    time exceeded k x the running median).  ``value`` is the observed
+    quantity, ``threshold`` what it was checked against.
+    """
+
+    kind: str
+    value: float
+    threshold: float
+    round: Optional[int] = None
+    detail: Optional[Dict[str, Any]] = None
+
+    def to_record(self) -> Dict[str, Any]:
+        return {"ev": "monitor", "v": SCHEMA_VERSION, "round": self.round,
+                "kind": self.kind, "value": self.value,
+                "threshold": self.threshold,
+                "detail": dict(self.detail or {})}
+
+
+@dataclasses.dataclass
+class ProfileEvent:
+    """Roofline numbers for one jitted function (new in schema v2).
+
+    Recorded once per (function, input shapes) compilation.  ``flops``
+    and ``bytes_accessed`` come from XLA ``cost_analysis()``;
+    ``peak_flops`` is the backend peak estimated *at trace time* so a
+    trace stays interpretable on another machine.  ``stage`` links the
+    profile to the stage events that time this function's executions.
+    """
+
+    name: str
+    stage: Optional[str]
+    flops: float
+    bytes_accessed: float
+    peak_flops: float
+    compile_s: float = 0.0
+    round: Optional[int] = None
+
+    def to_record(self) -> Dict[str, Any]:
+        return {"ev": "profile", "v": SCHEMA_VERSION, "round": self.round,
+                "name": self.name, "stage": self.stage,
+                "flops": self.flops,
+                "bytes_accessed": self.bytes_accessed,
+                "peak_flops": self.peak_flops,
+                "compile_s": self.compile_s}
+
+
 def header_record(meta: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
     return {"ev": "header", "v": SCHEMA_VERSION, "meta": dict(meta or {})}
 
@@ -141,17 +223,30 @@ _KINDS = {
         delta_obj=r["delta_obj"], n_selected=r["n_selected"],
         n_uploaded=r["n_uploaded"], feasible=r["feasible"],
         test_acc=r.get("test_acc")),
+    "metrics": lambda r: MetricsEvent(families=r["families"],
+                                      round=r.get("round")),
+    "monitor": lambda r: MonitorEvent(
+        kind=r["kind"], value=r["value"], threshold=r["threshold"],
+        round=r.get("round"), detail=r.get("detail")),
+    "profile": lambda r: ProfileEvent(
+        name=r["name"], stage=r.get("stage"), flops=r["flops"],
+        bytes_accessed=r["bytes_accessed"],
+        peak_flops=r.get("peak_flops", 0.0),
+        compile_s=r.get("compile_s", 0.0), round=r.get("round")),
 }
 
 
 def parse_record(record: Dict[str, Any]):
     """Dict (one JSONL line) -> typed event; header/unknown -> None.
 
-    Raises ``ValueError`` on a schema-version mismatch so readers fail
-    loudly instead of mis-aggregating a future trace format.
+    Raises ``ValueError`` when the record's schema version is *newer*
+    than this reader so we fail loudly instead of mis-aggregating a
+    future trace format.  Older versions parse fine: v2 only added
+    event kinds (``metrics``/``monitor``/``profile``), so every v1
+    record is also a valid v2 record.
     """
     v = record.get("v", SCHEMA_VERSION)
-    if v != SCHEMA_VERSION:
-        raise ValueError(f"trace schema v{v} != reader v{SCHEMA_VERSION}")
+    if v > SCHEMA_VERSION:
+        raise ValueError(f"trace schema v{v} > reader v{SCHEMA_VERSION}")
     make = _KINDS.get(record.get("ev"))
     return make(record) if make else None

@@ -15,25 +15,48 @@ Aggregation rules
   (sum of round wall-clock) — how much of each round the stages
   explain;
 * a ``telemetry.device`` row: mean per-round totals of the eq. (16)-(18)
-  energy/cost terms and selected/uploaded counts.
+  energy/cost terms and selected/uploaded counts;
+* one ``telemetry.roofline.<stage>`` row per profiled stage (schema v2
+  ``profile`` events joined against that stage's mean wall-clock):
+  HLO FLOPs/bytes per call, achieved GFLOP/s and achieved/peak
+  utilization;
+* a ``telemetry.monitor`` row when the convergence monitor raised any
+  warnings: violation counts by kind.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
+import warnings
 from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 from . import events as ev
 
 
-def load_trace(path: str) -> List[Dict[str, Any]]:
-    """Read a JSONL trace into a list of record dicts (header included)."""
-    out = []
+def load_trace(path: str, strict: bool = False) -> List[Dict[str, Any]]:
+    """Read a JSONL trace into a list of record dicts (header included).
+
+    A process that dies mid-``_write`` leaves a truncated final line;
+    that is expected crash debris, so the default skips it with a
+    warning (``strict=True`` restores the raise).  A malformed line
+    anywhere *else* still raises — that is corruption, not truncation.
+    """
     with open(path) as f:
-        for line in f:
-            line = line.strip()
-            if line:
-                out.append(json.loads(line))
+        lines = f.readlines()
+    out = []
+    last = len(lines) - 1
+    for i, line in enumerate(lines):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            out.append(json.loads(line))
+        except json.JSONDecodeError:
+            if i == last and not strict:
+                warnings.warn(f"{path}: skipping truncated final trace "
+                              f"line ({line[:40]!r}...)")
+                continue
+            raise
     return out
 
 
@@ -62,9 +85,37 @@ class TraceSummary:
     infeasible_rounds: int
     coverage: Optional[float]              # stage time / round wall time
     device_totals: Dict[str, float]        # mean per-round sums over k
+    profiles: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=dict)              # kernel name -> roofline record
+    monitor_counts: Dict[str, int] = dataclasses.field(
+        default_factory=dict)              # violation kind -> count
+    last_metrics: Optional[List[Dict[str, Any]]] = None  # last snapshot
 
     def stage_seconds(self) -> float:
         return sum(s.total_s for s in self.stages.values())
+
+    def roofline(self) -> Dict[str, Dict[str, float]]:
+        """Join profiles against stage timings: per profiled stage, the
+        per-call FLOPs/bytes and achieved-vs-peak utilization."""
+        out: Dict[str, Dict[str, float]] = {}
+        for prof in self.profiles.values():
+            stage = prof.get("stage")
+            st = self.stages.get(stage) if stage else None
+            if st is None or st.calls == 0 or st.total_s <= 0.0:
+                continue
+            per_call_s = st.total_s / st.calls
+            achieved = prof["flops"] / per_call_s
+            peak = prof.get("peak_flops") or 0.0
+            out[stage] = {
+                "kernel": prof["name"],
+                "flops": prof["flops"],
+                "bytes_accessed": prof["bytes_accessed"],
+                "per_call_s": per_call_s,
+                "achieved_flops_per_s": achieved,
+                "peak_flops": peak,
+                "utilization": achieved / peak if peak > 0 else 0.0,
+            }
+        return out
 
 
 def summarize(trace: Iterable[Any]) -> TraceSummary:
@@ -77,6 +128,9 @@ def summarize(trace: Iterable[Any]) -> TraceSummary:
     infeasible = 0
     dev_totals: Dict[str, float] = {}
     dev_rounds = 0
+    profiles: Dict[str, Dict[str, float]] = {}
+    monitor_counts: Dict[str, int] = {}
+    last_metrics: Optional[List[Dict[str, Any]]] = None
 
     for r in records:
         e = ev.parse_record(r)
@@ -106,6 +160,15 @@ def summarize(trace: Iterable[Any]) -> TraceSummary:
                       "selected", "uploaded"):
                 dev_totals[k] = dev_totals.get(k, 0.0) + float(
                     sum(getattr(e, k)))
+        elif isinstance(e, ev.ProfileEvent):
+            profiles[e.name] = {"name": e.name, "stage": e.stage,
+                                "flops": e.flops,
+                                "bytes_accessed": e.bytes_accessed,
+                                "peak_flops": e.peak_flops}
+        elif isinstance(e, ev.MonitorEvent):
+            monitor_counts[e.kind] = monitor_counts.get(e.kind, 0) + 1
+        elif isinstance(e, ev.MetricsEvent):
+            last_metrics = e.families  # counters are cumulative: last wins
 
     # normalize solver counters to per-call means where that reads better
     solvers: Dict[str, Dict[str, float]] = {}
@@ -125,7 +188,9 @@ def summarize(trace: Iterable[Any]) -> TraceSummary:
     return TraceSummary(stages=stages, solvers=solvers, n_rounds=n_rounds,
                         total_wall_s=total_wall,
                         infeasible_rounds=infeasible, coverage=coverage,
-                        device_totals=dev_totals)
+                        device_totals=dev_totals, profiles=profiles,
+                        monitor_counts=monitor_counts,
+                        last_metrics=last_metrics)
 
 
 def rows(summary: TraceSummary) -> List[Tuple[str, float, str]]:
@@ -162,6 +227,16 @@ def rows(summary: TraceSummary) -> List[Tuple[str, float, str]]:
                     f"reward={d.get('reward', 0):.4f};"
                     f"selected={d.get('selected', 0):.1f};"
                     f"uploaded={d.get('uploaded', 0):.1f}"))
+    for stage, r in sorted(summary.roofline().items()):
+        out.append((f"telemetry.roofline.{stage}", r["per_call_s"] * 1e6,
+                    f"kernel={r['kernel']};flops={r['flops']:.3e};"
+                    f"bytes={r['bytes_accessed']:.3e};"
+                    f"achieved_gflops={r['achieved_flops_per_s'] / 1e9:.2f};"
+                    f"util={r['utilization']:.4f}"))
+    if summary.monitor_counts:
+        parts = ";".join(f"{k}={v}" for k, v in
+                         sorted(summary.monitor_counts.items()))
+        out.append(("telemetry.monitor", 0.0, parts))
     return out
 
 

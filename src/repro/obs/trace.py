@@ -22,6 +22,7 @@ trace (the swap-matching scorer's per-candidate power solves) pass the
 """
 from __future__ import annotations
 
+import atexit
 import json
 import time
 from typing import Any, Dict, IO, Optional
@@ -49,6 +50,7 @@ class NullTelemetry:
 
     enabled: bool = False
     annotate: bool = False
+    profile: bool = False
 
     def stage(self, name: str):
         return _NULL_STAGE
@@ -93,10 +95,19 @@ class _TimedStage:
     def __exit__(self, *exc):
         t1 = time.perf_counter()
         tele = self._tele
+        dur = t1 - self._t0
         tele.emit(ev.StageEvent(stage=self._name,
                                 t0_s=self._t0 - tele.created_s,
-                                dur_s=t1 - self._t0,
-                                round=tele.current_round))
+                                dur_s=dur, round=tele.current_round))
+        # mirror the duration into the process metrics registry (if one
+        # is installed) so stage latencies get p50/p95 histograms too
+        from . import metrics as metrics_mod
+
+        reg = metrics_mod.get_default()
+        if reg.enabled:
+            reg.histogram("feel_stage_seconds",
+                          "wall-clock per timed stage").observe(
+                              dur, stage=self._name)
         return False
 
 
@@ -112,15 +123,26 @@ class Telemetry(NullTelemetry):
         ``jax.profiler`` trace annotations (visible in TensorBoard /
         Perfetto profiles; off by default — it renames traced
         computations, which can perturb compilation caching).
+    profile:
+        ask instrumented trainers to record one ``ProfileEvent``
+        (HLO FLOPs / bytes, ``repro.obs.profile``) per jitted function
+        and input-shape combination — costs one extra AOT compile per
+        combination, so off by default.
     meta:
         free-form dict stored in the trace header.
+
+    A file-backed sink registers an ``atexit`` close so traces survive
+    un-context-managed use on exception paths; ``close()`` is
+    idempotent and unregisters the hook.
     """
 
     enabled = True
 
     def __init__(self, path: Optional[str] = None, annotate: bool = False,
+                 profile: bool = False,
                  meta: Optional[Dict[str, Any]] = None):
         self.annotate = annotate
+        self.profile = profile
         self.created_s = time.perf_counter()
         self.current_round: Optional[int] = None
         self.events: list = []
@@ -128,6 +150,7 @@ class Telemetry(NullTelemetry):
         if path is not None:
             self._file = open(path, "w")
             self._write(ev.header_record(meta))
+            atexit.register(self.close)
 
     # -- recording -----------------------------------------------------
     def stage(self, name: str):
@@ -165,6 +188,10 @@ class Telemetry(NullTelemetry):
         if self._file is not None:
             self._file.close()
             self._file = None
+            try:
+                atexit.unregister(self.close)
+            except Exception:  # pragma: no cover - interpreter teardown
+                pass
 
     def __enter__(self):
         return self

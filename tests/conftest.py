@@ -1,0 +1,14 @@
+"""Shared test fixtures."""
+import pytest
+
+from repro import obs
+
+
+@pytest.fixture(autouse=True)
+def _reset_obs_defaults():
+    """The telemetry sink and metrics registry are process-wide
+    defaults; a test that installs one must not leak it into the next
+    test, so both are reset after every test unconditionally."""
+    yield
+    obs.set_default(None)
+    obs.metrics.set_default(None)

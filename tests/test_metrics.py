@@ -1,0 +1,211 @@
+"""Tests for the repro.obs.metrics registry: instrument semantics,
+Prometheus text exposition, snapshot round-trip through the telemetry
+trace, and the default-registry install pattern."""
+import json
+import re
+
+import pytest
+
+from repro import obs
+from repro.obs import metrics
+
+
+# --------------------------------------------------------- instruments
+
+def test_counter_inc_value_and_labels():
+    reg = metrics.Registry()
+    c = reg.counter("feel_calls_total", "calls")
+    c.inc()
+    c.inc(2.5)
+    c.inc(1, method="ccp")
+    assert c.value() == 3.5
+    assert c.value(method="ccp") == 1.0
+    assert c.value(method="other") == 0.0
+    # get-or-create hands back the same family
+    assert reg.counter("feel_calls_total") is c
+
+
+def test_counter_rejects_negative_increments():
+    c = metrics.Registry().counter("c_total")
+    with pytest.raises(ValueError):
+        c.inc(-1.0)
+
+
+def test_gauge_set_and_inc():
+    g = metrics.Registry().gauge("g")
+    g.set(5.0)
+    g.set(2.0)
+    assert g.value() == 2.0
+    g.inc(-0.5)  # gauges may go down
+    assert g.value() == 1.5
+
+
+def test_histogram_observe_count_sum_quantile():
+    h = metrics.Registry().histogram("h_seconds",
+                                     buckets=(0.01, 0.1, 1.0))
+    for v in (0.005, 0.05, 0.05, 0.5, 5.0):
+        h.observe(v)
+    assert h.count() == 5
+    assert h.sum() == pytest.approx(5.605)
+    # quantile returns the upper bound of the containing bucket
+    assert h.quantile(0.5) == 0.1
+    assert h.quantile(0.99) == 1.0  # +Inf bucket -> largest finite bound
+    assert h.quantile(0.5, stage="x") == 0.0  # unseen labels
+
+
+def test_histogram_requires_sorted_buckets():
+    reg = metrics.Registry()
+    with pytest.raises(ValueError):
+        reg.histogram("bad", buckets=(1.0, 0.1))
+    with pytest.raises(ValueError):
+        reg.histogram("bad2", buckets=())
+
+
+def test_registry_rejects_kind_mismatch_and_bad_names():
+    reg = metrics.Registry()
+    reg.counter("x_total")
+    with pytest.raises(ValueError):
+        reg.gauge("x_total")
+    reg.gauge("g")
+    with pytest.raises(ValueError):
+        reg.counter("g")  # Gauge subclasses Counter; still rejected
+    with pytest.raises(ValueError):
+        reg.counter("0bad name")
+
+
+# ---------------------------------------------------------- exposition
+
+_SAMPLE_RE = re.compile(
+    r"^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^}]*\})? \S+$")
+
+
+def test_render_is_valid_prometheus_text_exposition():
+    reg = metrics.Registry()
+    reg.counter("feel_rounds_total", "rounds run").inc(3)
+    reg.gauge("feel_cost", 'net "cost"\nnow').set(-1.25)
+    h = reg.histogram("feel_lat_seconds", "latency", buckets=(0.1, 1.0))
+    h.observe(0.05, stage="sigma")
+    h.observe(2.0, stage="sigma")
+    text = reg.render()
+
+    lines = text.strip().split("\n")
+    for line in lines:
+        if line.startswith("# HELP") or line.startswith("# TYPE"):
+            continue
+        assert _SAMPLE_RE.match(line), f"malformed sample line: {line!r}"
+    assert "# TYPE feel_rounds_total counter" in lines
+    assert "feel_rounds_total 3" in lines
+    # HELP text is escaped (no raw newlines / quotes break the format)
+    assert r"# HELP feel_cost net \"cost\"\nnow" in lines
+    assert "feel_cost -1.25" in lines
+    # histogram: cumulative le buckets + sum + count
+    assert 'feel_lat_seconds_bucket{stage="sigma",le="0.1"} 1' in lines
+    assert 'feel_lat_seconds_bucket{stage="sigma",le="1.0"} 1' in lines
+    assert 'feel_lat_seconds_bucket{stage="sigma",le="+Inf"} 2' in lines
+    assert 'feel_lat_seconds_sum{stage="sigma"} 2.05' in lines
+    assert 'feel_lat_seconds_count{stage="sigma"} 2' in lines
+
+
+def test_snapshot_render_roundtrip():
+    reg = metrics.Registry()
+    reg.counter("c_total", "c").inc(2, method="a")
+    reg.gauge("g", "g").set(7.5)
+    reg.histogram("h_seconds", "h", buckets=(0.5,)).observe(0.25)
+    snap = reg.snapshot()
+    # snapshot is plain JSON
+    snap2 = json.loads(json.dumps(snap))
+    assert metrics.render_snapshot(snap2) == reg.render()
+
+
+# ------------------------------------------------- trace + CLI plumbing
+
+def test_metrics_event_flows_through_telemetry(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    reg = metrics.Registry()
+    reg.counter("feel_rounds_total", "rounds").inc(4)
+    with obs.Telemetry(path=path) as tele:
+        tele.emit(reg.snapshot_event(round=3))
+
+    records = obs.load_trace(path)
+    assert records[-1]["ev"] == "metrics"
+    e = obs.parse_record(records[-1])
+    assert isinstance(e, obs.MetricsEvent)
+    assert e.round == 3
+    assert metrics.render_snapshot(e.families) == reg.render()
+
+
+def test_metrics_cli_renders_last_snapshot(tmp_path, capsys):
+    path = str(tmp_path / "t.jsonl")
+    reg = metrics.Registry()
+    with obs.Telemetry(path=path) as tele:
+        reg.counter("feel_rounds_total", "rounds").inc()
+        tele.emit(reg.snapshot_event(round=0))
+        reg.counter("feel_rounds_total").inc()
+        tele.emit(reg.snapshot_event(round=1))  # cumulative: last wins
+
+    metrics.main([path])
+    out = capsys.readouterr().out
+    assert "# TYPE feel_rounds_total counter" in out
+    assert "feel_rounds_total 2" in out
+
+
+def test_metrics_cli_errors_on_trace_without_metrics(tmp_path):
+    path = str(tmp_path / "empty.jsonl")
+    with obs.Telemetry(path=path) as tele:
+        tele.begin_round(0)
+        tele.round_end(wall_s=0.0, net_cost=0.0, delta_obj=0.0,
+                       n_selected=0, n_uploaded=0, feasible=True)
+    with pytest.raises(SystemExit):
+        metrics.main([path])
+
+
+# ----------------------------------------------------- default pattern
+
+def test_null_registry_is_default_and_noop():
+    assert metrics.get_default() is metrics.NULL
+    assert metrics.NULL.enabled is False
+    # instruments are shared no-ops; nothing raises, nothing records
+    metrics.NULL.counter("x").inc(5)
+    metrics.NULL.gauge("y").set(1.0)
+    metrics.NULL.histogram("z").observe(0.1)
+    assert metrics.NULL.snapshot() == []
+    assert metrics.NULL.render() == ""
+    assert metrics.NULL.snapshot_event().families == []
+
+
+def test_set_default_install_resolve_and_reset():
+    reg = metrics.Registry()
+    metrics.set_default(reg)
+    try:
+        assert metrics.get_default() is reg
+        assert metrics.resolve(None) is reg
+        other = metrics.Registry()
+        assert metrics.resolve(other) is other
+    finally:
+        metrics.set_default(None)
+    assert metrics.get_default() is metrics.NULL
+
+
+def test_timed_stage_mirrors_into_default_registry():
+    reg = metrics.Registry()
+    metrics.set_default(reg)
+    tele = obs.Telemetry()
+    with tele.stage("sigma"):
+        pass
+    metrics.set_default(None)
+    h = reg.histogram("feel_stage_seconds")
+    assert h.count(stage="sigma") == 1
+
+    # without an installed registry nothing is recorded
+    tele2 = obs.Telemetry()
+    with tele2.stage("sigma"):
+        pass
+    assert h.count(stage="sigma") == 1
+
+
+def test_registry_reset_clears_families():
+    reg = metrics.Registry()
+    reg.counter("c_total").inc()
+    reg.reset()
+    assert reg.snapshot() == []
+    assert reg.counter("c_total").value() == 0.0

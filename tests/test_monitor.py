@@ -1,0 +1,177 @@
+"""Tests for the convergence monitor (repro.obs.monitor) and the
+vectorized Lemma-3 bound it consumes (repro.core.convergence)."""
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import convergence, default_system
+from repro.obs import metrics
+
+
+def _sys(D_hat=8):
+    return default_system(K=4, N=3, Q=2, D_hat=D_hat)
+
+
+def _clean_gaps(sys_, n, gap0=1.0, g_norm_sq=0.5, eta=0.1, delta=4.0,
+                beta=1.0):
+    """A trajectory that sits exactly on the Lemma-2 recursion."""
+    gaps = [gap0]
+    for _ in range(n - 1):
+        gaps.append(float(convergence.one_round_bound_from_delta(
+            sys_, gaps[-1], g_norm_sq, eta, beta, delta)))
+    return gaps
+
+
+# ----------------------------------------------------- bound violation
+
+def test_clean_trajectory_raises_nothing():
+    sys_ = _sys()
+    mon = obs.ConvergenceMonitor(sys_, obs.MonitorConfig(beta=1.0),
+                                 telemetry=obs.NULL, registry=metrics.NULL)
+    for i, gap in enumerate(_clean_gaps(sys_, 10)):
+        out = mon.observe_round(i, gap=gap, g_norm_sq=0.5, eta=0.1,
+                                delta_obj=4.0)
+        assert out == []
+    assert mon.violations == []
+    assert mon.counts() == {k: 0 for k in obs.monitor.VIOLATION_KINDS}
+    # the theory tracked reality exactly
+    assert mon.bound_gap_ratio() == pytest.approx(1.0)
+
+
+def test_injected_bound_crossing_raises_exactly_one_violation(tmp_path):
+    path = str(tmp_path / "mon.jsonl")
+    sys_ = _sys()
+    reg = metrics.Registry()
+    tele = obs.Telemetry(path=path)
+    mon = obs.ConvergenceMonitor(sys_, obs.MonitorConfig(beta=1.0),
+                                 telemetry=tele, registry=reg)
+    gaps = _clean_gaps(sys_, 6)
+    gaps[3] = gaps[3] * 2.0  # inject: round 3 jumps past its bound
+    for i, gap in enumerate(gaps):
+        mon.observe_round(i, gap=gap, g_norm_sq=0.5, eta=0.1,
+                          delta_obj=4.0)
+    tele.close()
+
+    assert [v.kind for v in mon.violations] == ["bound_violation"]
+    v = mon.violations[0]
+    assert v.round == 3
+    assert v.value == pytest.approx(gaps[3])
+    assert v.value > v.threshold
+    assert mon.bound_gap_ratio() == pytest.approx(2.0, rel=1e-5)
+
+    # the violation reached both sinks: trace event + metrics counter
+    mev = [e for e in tele.events if isinstance(e, obs.MonitorEvent)]
+    assert len(mev) == 1 and mev[0].kind == "bound_violation"
+    assert mev[0].round == 3
+    rec = [r for r in obs.load_trace(path) if r["ev"] == "monitor"]
+    assert len(rec) == 1
+    assert reg.counter("feel_monitor_violations_total").value(
+        kind="bound_violation") == 1.0
+
+
+def test_bound_rtol_tolerates_stochastic_wiggle():
+    sys_ = _sys()
+    mon = obs.ConvergenceMonitor(
+        sys_, obs.MonitorConfig(beta=1.0, bound_rtol=0.5),
+        telemetry=obs.NULL, registry=metrics.NULL)
+    gaps = _clean_gaps(sys_, 5)
+    gaps[2] *= 1.4  # within the 50% slack
+    for i, gap in enumerate(gaps):
+        mon.observe_round(i, gap=gap, g_norm_sq=0.5, eta=0.1,
+                          delta_obj=4.0)
+    assert mon.counts()["bound_violation"] == 0
+
+
+# --------------------------------------------- divergence + stragglers
+
+def test_gap_divergence_fires_once_per_episode():
+    sys_ = _sys()
+    mon = obs.ConvergenceMonitor(
+        sys_, obs.MonitorConfig(divergence_window=3, bound_rtol=1e9),
+        telemetry=obs.NULL, registry=metrics.NULL)
+    gaps = [1.0, 1.1, 1.2, 1.3, 1.4, 1.5, 1.6]  # monotone rise
+    for i, gap in enumerate(gaps):
+        mon.observe_round(i, gap=gap, g_norm_sq=0.0, eta=0.1,
+                          delta_obj=0.0)
+    # fires on the transition into divergence, not on every round of it
+    assert mon.counts()["gap_divergence"] == 1
+
+
+def test_straggler_round_detected_against_median():
+    sys_ = _sys()
+    mon = obs.ConvergenceMonitor(
+        sys_, obs.MonitorConfig(straggler_factor=3.0,
+                                straggler_min_history=5, bound_rtol=1e9),
+        telemetry=obs.NULL, registry=metrics.NULL)
+    walls = [0.1] * 6 + [1.0]  # last round is 10x the median
+    out = []
+    for i, w in enumerate(walls):
+        out += mon.observe_round(i, gap=1.0, g_norm_sq=0.0, eta=0.1,
+                                 delta_obj=0.0, wall_s=w)
+    stragglers = [v for v in out if v.kind == "straggler"]
+    assert len(stragglers) == 1
+    assert stragglers[0].round == 6
+    assert stragglers[0].detail["what"] == "round"
+
+
+def test_straggler_stage_timings():
+    sys_ = _sys()
+    mon = obs.ConvergenceMonitor(
+        sys_, obs.MonitorConfig(straggler_factor=2.0,
+                                straggler_min_history=3, bound_rtol=1e9),
+        telemetry=obs.NULL, registry=metrics.NULL)
+    for i in range(5):
+        slow = 0.9 if i == 4 else 0.01
+        mon.observe_round(i, gap=1.0, g_norm_sq=0.0, eta=0.1,
+                          delta_obj=0.0,
+                          stage_s={"sigma": 0.01, "power": slow})
+    s = [v for v in mon.violations if v.kind == "straggler"]
+    assert len(s) == 1 and s[0].detail["what"] == "power"
+
+
+def test_summary_shape():
+    sys_ = _sys()
+    mon = obs.ConvergenceMonitor(sys_, telemetry=obs.NULL,
+                                 registry=metrics.NULL)
+    mon.observe_round(0, gap=1.0, g_norm_sq=0.5, eta=0.1, delta_obj=4.0)
+    s = mon.summary()
+    assert s["rounds"] == 1
+    assert s["bound_gap_ratio"] is None  # needs two rounds
+    assert s["final_gap"] == 1.0
+    assert s["final_bound"] is not None
+    assert set(s["violations"]) == set(obs.monitor.VIOLATION_KINDS)
+
+
+# ------------------------------------------- Lemma 3: cumprod vs oracle
+
+@pytest.mark.parametrize("n", [1, 2, 7, 40])
+def test_multi_round_bound_matches_scalar_oracle(n):
+    sys_ = _sys(D_hat=8)
+    rng = np.random.default_rng(0)
+    etas = rng.uniform(0.01, 0.2, n).tolist()
+    deltas = rng.uniform(0.0, 10.0, n).tolist()
+    fast = convergence.multi_round_bound(sys_, 2.0, 0.5, 1.5, etas, deltas)
+    ref = convergence.multi_round_bound_ref(sys_, 2.0, 0.5, 1.5, etas,
+                                            deltas)
+    assert fast == pytest.approx(ref, rel=1e-5)
+
+
+def test_multi_round_bound_edge_cases():
+    sys_ = _sys()
+    assert convergence.multi_round_bound(sys_, 3.0, 0.5, 1.0, [], []) == 3.0
+    with pytest.raises(ValueError):
+        convergence.multi_round_bound(sys_, 3.0, 0.5, 1.0, [0.1], [])
+
+
+def test_monitor_tracks_lemma3_trajectory_when_mu_set():
+    sys_ = _sys()
+    mon = obs.ConvergenceMonitor(
+        sys_, obs.MonitorConfig(beta=1.0, mu=0.5, bound_rtol=1e9),
+        telemetry=obs.NULL, registry=metrics.NULL)
+    for i, gap in enumerate(_clean_gaps(sys_, 4)):
+        mon.observe_round(i, gap=gap, g_norm_sq=0.5, eta=0.1,
+                          delta_obj=4.0)
+    assert len(mon.multi_bounds) == 4
+    ref = convergence.multi_round_bound_ref(
+        sys_, mon.gaps[0], 0.5, 1.0, mon._etas, mon._deltas)
+    assert mon.multi_bounds[-1] == pytest.approx(ref, rel=1e-5)

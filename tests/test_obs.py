@@ -122,6 +122,53 @@ def test_set_default_install_and_reset():
     assert obs.get_default() is obs.NULL
 
 
+def test_load_trace_tolerates_truncated_final_line(tmp_path):
+    path = str(tmp_path / "crash.jsonl")
+    with obs.Telemetry(path=path) as tele:
+        tele.begin_round(0)
+        tele.solver("power", method="closed_form", feasible=True)
+    # simulate a process dying mid-write
+    with open(path, "a") as f:
+        f.write('{"ev": "round", "v": 2, "wall_s": 0.')
+
+    with pytest.warns(UserWarning, match="truncated final trace line"):
+        records = obs.load_trace(path)
+    assert [r["ev"] for r in records] == ["header", "solver"]
+
+    # strict mode restores the raise
+    with pytest.raises(json.JSONDecodeError):
+        obs.load_trace(path, strict=True)
+
+    # corruption anywhere else still raises in default mode
+    bad = str(tmp_path / "corrupt.jsonl")
+    with open(path) as f:
+        lines = f.readlines()
+    with open(bad, "w") as f:
+        f.write(lines[0])
+        f.write('{"ev": "solv\n')  # malformed *interior* line
+        f.write(lines[1])
+    with pytest.raises(json.JSONDecodeError):
+        obs.load_trace(bad)
+
+
+def test_telemetry_close_is_idempotent(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    tele = obs.Telemetry(path=path)
+    tele.begin_round(0)
+    tele.solver("power", feasible=True)
+    tele.close()
+    tele.close()  # double close: no error, no re-registration issues
+    assert obs.load_trace(path)[-1]["ev"] == "solver"
+    # events stay readable in memory after close; file writes stop
+    tele.solver("power", feasible=True)
+    assert len(tele.events) == 2
+    assert len(obs.load_trace(path)) == 2  # header + first solver only
+
+    # context-manager exit and explicit close compose
+    with obs.Telemetry(path=str(tmp_path / "u.jsonl")) as t2:
+        t2.close()
+
+
 # ------------------------------------------------------- trainer round
 
 def _tiny_trainer(telemetry=None, scheme="proposed"):
@@ -194,3 +241,37 @@ def test_trainer_disabled_by_default_and_unchanged():
     assert m2.net_cost == pytest.approx(m.net_cost)
     assert m2.n_selected == m.n_selected
     assert m2.n_uploaded == m.n_uploaded
+
+
+def test_full_observability_is_bit_for_bit_identical(tmp_path):
+    """The whole observability stack — trace + profiling + metrics +
+    monitor — must not change a single bit of the training state."""
+    plain = _tiny_trainer()
+    ms_plain = plain.run(2)
+
+    reg = obs.Registry()
+    obs.metrics.set_default(reg)
+    tele = obs.Telemetry(path=str(tmp_path / "t.jsonl"), profile=True)
+    inst = _tiny_trainer(telemetry=tele)
+    inst.monitor = obs.ConvergenceMonitor(inst.sys, telemetry=tele,
+                                          registry=reg)
+    ms_inst = inst.run(2)
+    obs.metrics.set_default(None)
+    tele.close()
+
+    leaves_a = jax.tree.leaves(plain.params)
+    leaves_b = jax.tree.leaves(inst.params)
+    assert len(leaves_a) == len(leaves_b)
+    for a, b in zip(leaves_a, leaves_b):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    for ma, mb in zip(ms_plain, ms_inst):
+        assert ma.net_cost == mb.net_cost  # exact, not approx
+        assert ma.n_selected == mb.n_selected
+        assert ma.n_uploaded == mb.n_uploaded
+
+    # and the instrumented run actually recorded everything
+    kinds = {type(e).__name__ for e in tele.events}
+    assert {"StageEvent", "SolverEvent", "RoundEvent",
+            "ProfileEvent"} <= kinds
+    assert reg.counter("feel_rounds_total").value() == 2.0
+    assert inst.monitor.summary()["rounds"] == 2
