@@ -1,0 +1,70 @@
+"""Fault-tolerance overhead: per-round cost of the resilience layer.
+
+Three configurations over the same reduced paper-§VI setup:
+
+* ``plain``      — pre-fault-tolerance trainer (faults=None, no
+  resilience): the bit-identity baseline;
+* ``resilient``  — resilience on, a fault plan whose rates are all 0:
+  measures the pure bookkeeping overhead of the layer;
+* ``chaos``      — the aggressive ``CHAOS_SPEC`` preset (30% dropout,
+  stragglers, NaN uploads, forced solver failures): measures a round
+  under fire, including fallback solves and quarantine screening.
+
+Also emits the checkpoint write/restore latency.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.fed import CHAOS_SPEC, FaultSpec, ResilienceConfig
+
+from .common import emit, make_feel_trainer
+
+ROUNDS = 6
+
+
+def _run(name: str, derived: str, **kw) -> None:
+    tr = make_feel_trainer("proposed", side=12, d_hat=24, gp_steps=60,
+                           **kw)
+    tr.run_round(0)  # warmup / jit compile outside the timed window
+    t0 = time.time()
+    ms = [tr.run_round(i) for i in range(1, 1 + ROUNDS)]
+    us = (time.time() - t0) / ROUNDS * 1e6
+    dropped = sum(m.n_dropped for m in ms)
+    fb = sum(len(m.fallbacks) for m in ms)
+    emit(name, us, f"{derived};dropped={dropped};fallbacks={fb}")
+
+
+def run():
+    _run("chaos_round_plain", "faults=off;resilience=off")
+    _run("chaos_round_resilient", "faults=0-rate;resilience=on",
+         faults=FaultSpec(seed=0), resilience=ResilienceConfig())
+    _run("chaos_round_chaos", "faults=CHAOS_SPEC;resilience=on",
+         faults=CHAOS_SPEC, resilience=ResilienceConfig())
+
+    # checkpoint write / restore latency
+    tr = make_feel_trainer("proposed", side=12, d_hat=24, gp_steps=60,
+                           resilience=ResilienceConfig())
+    tr.run_round(0)
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "bench_ckpt")
+        t0 = time.time()
+        for _ in range(5):
+            tr.save_checkpoint(path=path, next_round=1)
+        emit("chaos_checkpoint_save", (time.time() - t0) / 5 * 1e6,
+             "atomic npz+meta")
+        t0 = time.time()
+        for _ in range(5):
+            tr.resume(path=path)
+        emit("chaos_checkpoint_resume", (time.time() - t0) / 5 * 1e6,
+             "restore params+opt+rng")
+        n_bytes = os.path.getsize(path + ".npz")
+    emit("chaos_checkpoint_bytes", 0.0, f"npz_bytes={n_bytes}")
+
+
+if __name__ == "__main__":
+    run()

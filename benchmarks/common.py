@@ -30,7 +30,8 @@ def emit(name: str, us_per_call: float, derived: str) -> None:
 def make_feel_trainer(scheme: str, *, rounds_seed: int = 0, K: int = 10,
                       side: int = 16, d_hat: int = 40,
                       mislabel_prop: float = 0.1, eps_override=None,
-                      selection: str = "faithful", gp_steps: int = 150):
+                      selection: str = "faithful", gp_steps: int = 150,
+                      faults=None, resilience=None):
     """Paper §VI setup, reduced for the CPU container: smaller images /
     D̂ but identical structure (non-IID one-class devices, N=5 RBs,
     Q=2, odd/even cost-reward-availability asymmetry)."""
@@ -52,7 +53,8 @@ def make_feel_trainer(scheme: str, *, rounds_seed: int = 0, K: int = 10,
     model = types.SimpleNamespace(features=cnn.features, apply=cnn.apply,
                                   loss_fn=cnn.loss_fn,
                                   accuracy=cnn.accuracy)
-    return FEELTrainer(sys_, data, model, params, cfg)
+    return FEELTrainer(sys_, data, model, params, cfg,
+                       faults=faults, resilience=resilience)
 
 
 def run_scheme(scheme: str, rounds: int, **kw):

@@ -23,7 +23,7 @@ def main() -> None:
                     help="skip the multi-round training figures")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: alg1,fig3,lemma3,fig4,"
-                         "fig5,fig6,roofline")
+                         "fig5,fig6,roofline,chaos")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="write a repro.obs JSONL telemetry trace and "
                          "append its summary rows to the CSV output")
@@ -47,14 +47,16 @@ def main() -> None:
         reg = obs.Registry()
         obs.metrics.set_default(reg)
 
-    from . import (alg1_latency, fig3_ccp_convergence, fig4_convergence_cost,
-                   fig5_mislabel, fig6_availability, lemma3_bound, roofline)
+    from . import (alg1_latency, chaos, fig3_ccp_convergence,
+                   fig4_convergence_cost, fig5_mislabel, fig6_availability,
+                   lemma3_bound, roofline)
 
     benches = [
         ("alg1", alg1_latency.run),
         ("fig3", fig3_ccp_convergence.run),
         ("lemma3", lemma3_bound.run),
         ("roofline", roofline.run),
+        ("chaos", chaos.run),
     ]
     if not args.fast:
         benches += [

@@ -9,15 +9,27 @@ IPW aggregation.  Compare --scheme proposed vs baseline1..baseline4.
 """
 import argparse
 import json
+import sys
 import types
 
 import jax
+import numpy as np
 
 from repro import obs
 from repro.core import default_system
 from repro.data import SyntheticImages, non_iid_split
-from repro.fed import FEELConfig, FEELTrainer
+from repro.fed import (CHAOS_SPEC, FEELConfig, FEELTrainer, FaultSpec,
+                       ResilienceConfig)
 from repro.models import cnn
+
+
+def parse_faults(arg):
+    """--faults chaos | --faults '{"seed": 1, "dropout_prob": 0.2}'."""
+    if arg is None:
+        return None
+    if arg == "chaos":
+        return CHAOS_SPEC
+    return FaultSpec.from_dict(json.loads(arg))
 
 
 def main():
@@ -41,7 +53,24 @@ def main():
     ap.add_argument("--metrics", default=None, metavar="PATH",
                     help="install a process-wide metrics registry and "
                          "write its Prometheus exposition to PATH")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="inject faults: 'chaos' for the aggressive "
+                         "preset, or a FaultSpec JSON object "
+                         "(docs/robustness.md)")
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="directory for periodic trainer checkpoints")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    metavar="N", help="checkpoint every N rounds")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the checkpoint in --checkpoint-dir "
+                         "before running")
+    ap.add_argument("--check-resume", action="store_true",
+                    help="self-test: run to completion, then replay the "
+                         "second half from a mid-run checkpoint with a "
+                         "fresh trainer and assert bit-identical params "
+                         "(exits non-zero on mismatch)")
     args = ap.parse_args()
+    faults = parse_faults(args.faults)
 
     train = SyntheticImages.make(6000, side=args.side, seed=0)
     test = SyntheticImages.make(1500, side=args.side, seed=1)
@@ -68,10 +97,58 @@ def main():
     monitor = None
     if args.monitor:
         monitor = obs.ConvergenceMonitor(sys_, telemetry=tele, registry=reg)
-    trainer = FEELTrainer(sys_, data, model, params, cfg, telemetry=tele,
-                          monitor=monitor)
+
+    resilience = None
+    if (faults is not None or args.checkpoint_every or args.checkpoint_dir
+            or args.check_resume):
+        resilience = ResilienceConfig(checkpoint_every=args.checkpoint_every,
+                                      checkpoint_dir=args.checkpoint_dir)
+
+    def make_trainer(res=resilience, quiet=False):
+        p0 = cnn.init(jax.random.PRNGKey(0), cc)
+        return FEELTrainer(sys_, data, model, p0, cfg,
+                           telemetry=None if quiet else tele,
+                           monitor=None if quiet else monitor,
+                           faults=faults, resilience=res)
+
+    trainer = make_trainer()
+    if args.resume:
+        start = trainer.resume()
+        print(f"resumed from round {start}")
     metrics = trainer.run(args.rounds, verbose=True)
     final = [m for m in metrics if m.test_acc is not None][-1]
+
+    if args.check_resume:
+        import tempfile
+        half = max(args.rounds // 2, 1)
+        with tempfile.TemporaryDirectory() as tmp:
+            # threshold 1: any surviving NaN upload quarantines, so the
+            # chaos run deterministically exercises the quarantine path
+            res = ResilienceConfig(checkpoint_every=half,
+                                   checkpoint_dir=tmp,
+                                   quarantine_threshold=1)
+            full = make_trainer(res=res, quiet=True)
+            ms_full = full.run(args.rounds)
+            partial = make_trainer(res=res, quiet=True)
+            partial.run(half)  # writes the checkpoint at round `half`
+            resumed = make_trainer(res=res, quiet=True)
+            start = resumed.resume()
+            resumed.run(args.rounds)
+        same = all(np.array_equal(a, b)
+                   for a, b in zip(jax.tree.leaves(full.params),
+                                   jax.tree.leaves(resumed.params)))
+        ok_finite = all(bool(np.isfinite(np.asarray(x)).all())
+                        for x in jax.tree.leaves(full.params))
+        n_quar = sum(m.n_quarantined for m in ms_full)
+        print(f"\ncheck-resume: resumed_at={start} bit_identical={same} "
+              f"finite={ok_finite} quarantined_device_rounds={n_quar}")
+        if not (same and ok_finite):
+            print("check-resume FAILED", file=sys.stderr)
+            raise SystemExit(1)
+        if faults is not None and faults.nan_prob > 0 and n_quar == 0:
+            print("check-resume FAILED: chaos plan injected NaN uploads "
+                  "but quarantine never triggered", file=sys.stderr)
+            raise SystemExit(1)
     print(f"\nFINAL: acc={final.test_acc:.3f} "
           f"cum_net_cost={final.cum_net_cost:+.3f}")
     if tele is not None:

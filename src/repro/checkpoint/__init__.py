@@ -1,3 +1,5 @@
-from .checkpoint import load_pytree, restore_sharded, save_pytree
+from .checkpoint import (load_metadata, load_pytree, restore_sharded,
+                         save_pytree)
 
-__all__ = ["save_pytree", "load_pytree", "restore_sharded"]
+__all__ = ["save_pytree", "load_pytree", "restore_sharded",
+           "load_metadata"]

@@ -28,6 +28,9 @@ def _flatten(tree: Any):
 
 
 def save_pytree(path: str, tree: Any, metadata: Optional[dict] = None):
+    """Write atomically: a crash mid-write leaves either the previous
+    complete checkpoint or none, never a truncated .npz — what makes
+    periodic checkpointing crash-safe (``FEELTrainer.resume``)."""
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     arrays, _ = _flatten(tree)
     dtypes = {}
@@ -40,10 +43,16 @@ def save_pytree(path: str, tree: Any, metadata: Optional[dict] = None):
         store[key] = arr
     store["__dtypes__"] = np.frombuffer(
         json.dumps(dtypes).encode(), dtype=np.uint8)
-    np.savez(path, **store)
+    final = path if path.endswith(".npz") else path + ".npz"
+    tmp = final + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **store)
+    os.replace(tmp, final)
     if metadata is not None:
-        with open(path + ".meta.json", "w") as f:
+        tmp_meta = path + ".meta.json.tmp"
+        with open(tmp_meta, "w") as f:
             json.dump(metadata, f, indent=2)
+        os.replace(tmp_meta, path + ".meta.json")
 
 
 def load_pytree(path: str, like: Any) -> Any:

@@ -39,11 +39,18 @@ class RoundDecision:
     objective: float     # Problem-2 objective
     feasible: bool
     swaps: int = 0
+    #: available devices the matching could not give an RB (partial
+    #: matching outcome, see core/matching.py) — they cannot upload.
+    unmatched: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int64))
+    #: solver degradations taken while producing this decision, e.g.
+    #: ["matching->greedy", "ccp->closed_form"]; empty = clean solve.
+    fallbacks: tuple = ()
 
 
 def _finish(sys: SystemParams, rho, p, delta, state: RoundState,
-            feasible: bool, swaps: int = 0,
-            telemetry=None) -> RoundDecision:
+            feasible: bool, swaps: int = 0, unmatched=None,
+            fallbacks: tuple = (), telemetry=None) -> RoundDecision:
     tele = obs.resolve(telemetry)
     with tele.stage("objective"):
         rho_j = jnp.asarray(rho, jnp.float32)
@@ -61,9 +68,50 @@ def _finish(sys: SystemParams, rho, p, delta, state: RoundState,
                   "net cost (eq. 18) of the last round decision").set(nc)
         reg.gauge("feel_decision_delta_obj",
                   "Delta_hat (eq. 26) of the last round decision").set(dv)
+    if unmatched is None:
+        unmatched = np.zeros(0, np.int64)
     return RoundDecision(rho=np.asarray(rho), p=np.asarray(p),
                          delta=np.asarray(delta), net_cost=nc, delta_obj=dv,
-                         objective=obj, feasible=feasible, swaps=swaps)
+                         objective=obj, feasible=feasible, swaps=swaps,
+                         unmatched=np.asarray(unmatched, np.int64),
+                         fallbacks=tuple(fallbacks))
+
+
+def _count_injected(kind: str) -> None:
+    reg = metrics_mod.get_default()
+    if reg.enabled:
+        reg.counter("feel_faults_injected_total",
+                    "faults injected by the FaultPlan, by kind").inc(
+                        1, kind=kind)
+
+
+def _count_fallback(solver: str, to: str) -> None:
+    reg = metrics_mod.get_default()
+    if reg.enabled:
+        reg.counter("feel_fallbacks_total",
+                    "solver degradations by solver and target").inc(
+                        1, solver=solver, to=to)
+
+
+def _greedy_fallback(sys: SystemParams, state: RoundState, tele,
+                     injected: bool, reason: str):
+    """Terminal link of the matching chain: greedy max-gain RB
+    assignment (the baseline-3/4 construction) + exact closed-form
+    powers.  Pure numpy + one closed-form solve — cannot raise."""
+    h = np.asarray(state.h)
+    alpha = np.asarray(state.alpha)
+    rho = _greedy_rb(sys, h, alpha, prefer_max=True)
+    with tele.stage("power"):
+        p, cost, ok = power_mod.allocate_power(
+            sys, jnp.asarray(rho), state.h, state.alpha,
+            method="closed_form", telemetry=tele)
+        p = tele.block(p)
+    tele.fault("fallback", injected=injected, solver="matching",
+               to="greedy", reason=reason)
+    _count_fallback("matching", "greedy")
+    avail = np.flatnonzero(alpha > 0)
+    unmatched = avail[rho[avail].sum(axis=1) <= 0]
+    return rho, np.asarray(p), ok and unmatched.size == 0, unmatched
 
 
 def proposed_scheme(sys: SystemParams, state: RoundState,
@@ -71,19 +119,112 @@ def proposed_scheme(sys: SystemParams, state: RoundState,
                     power_evaluator: str = "closed_form",
                     gp_steps: int = 400,
                     gp_step0: float = 0.3,
+                    faults=None,
+                    repair_infeasible: bool = False,
                     telemetry=None) -> RoundDecision:
-    """Algorithm 1 (the paper's proposed scheme)."""
+    """Algorithm 1 (the paper's proposed scheme).
+
+    ``faults``: an optional ``repro.fed.faults.RoundFaults`` whose
+    ``fail_power``/``fail_matching`` flags force the corresponding
+    solve to fail so the fallback chain runs (chaos testing).  The
+    chain — CCP power failure -> closed-form evaluator, failed/
+    infeasible matching -> greedy feasible baseline — also catches
+    *natural* failures: a solver exception degrades instead of
+    propagating, and every degradation is recorded as a ``fault`` trace
+    event plus ``feel_fallbacks_total``.
+
+    ``repair_infeasible``: additionally route *naturally infeasible*
+    (but non-crashing) matchings through the greedy fallback when that
+    repairs feasibility.  Off by default so a plain run stays
+    bit-for-bit the pre-fallback behavior; ``FEELTrainer`` turns it on
+    whenever its resilience layer is active.
+    """
     tele = obs.resolve(telemetry)
-    match = matching_mod.swap_matching(sys, state.h, state.alpha,
-                                       evaluator=power_evaluator,
-                                       telemetry=tele)
+    fallbacks = []
+    evaluator = power_evaluator
+
+    # -- forced power failure: downgrade the evaluator up front --------
+    if faults is not None and faults.fail_power:
+        tele.fault("solver_fail", injected=True, solver="power",
+                   method=evaluator)
+        _count_injected("solver_fail")
+        if evaluator != "closed_form":
+            tele.fault("fallback", injected=True, solver="power",
+                       to="closed_form", reason="injected")
+            _count_fallback("power", "closed_form")
+            fallbacks.append(f"{evaluator}->closed_form")
+            evaluator = "closed_form"
+        # closed form is the chain's terminal link: nothing to degrade
+        # to — the injected failure is recorded and the solve proceeds.
+
+    # -- matching with the greedy terminal fallback --------------------
+    match = None
+    if faults is not None and faults.fail_matching:
+        tele.fault("solver_fail", injected=True, solver="matching")
+        _count_injected("solver_fail")
+        matching_reason = "injected"
+    else:
+        matching_reason = None
+        try:
+            match = matching_mod.swap_matching(sys, state.h, state.alpha,
+                                               evaluator=evaluator,
+                                               telemetry=tele)
+        except Exception as e:  # degrade, don't die
+            matching_reason = type(e).__name__
+            tele.fault("solver_fail", injected=False, solver="matching",
+                       reason=matching_reason)
+            if evaluator != "closed_form":
+                # the CCP scorer may be the culprit: retry the matching
+                # with the exact closed-form evaluator first
+                tele.fault("fallback", injected=False, solver="power",
+                           to="closed_form", reason=matching_reason)
+                _count_fallback("power", "closed_form")
+                fallbacks.append(f"{evaluator}->closed_form")
+                evaluator = "closed_form"
+                try:
+                    match = matching_mod.swap_matching(
+                        sys, state.h, state.alpha, evaluator=evaluator,
+                        telemetry=tele)
+                except Exception as e2:  # pragma: no cover - double fail
+                    matching_reason = type(e2).__name__
+
+    if match is not None and match.feasible:
+        rho, p = match.rho, match.p
+        feasible, swaps, unmatched = True, match.swaps, match.unmatched
+    elif match is not None:
+        # naturally infeasible (but non-crashing) matching: with the
+        # resilience layer active, try the greedy terminal fallback —
+        # it often repairs feasibility (max-gain assignments need less
+        # power).  Otherwise keep the infeasible decision so a plain
+        # run stays bit-identical to the pre-fallback behavior.
+        repaired = False
+        if repair_infeasible:
+            rho_g, p_g, ok_g, un_g = _greedy_fallback(
+                sys, state, tele, injected=False, reason="infeasible")
+            if ok_g:
+                rho, p, feasible, swaps = rho_g, p_g, True, 0
+                unmatched = un_g
+                fallbacks.append("matching->greedy")
+                repaired = True
+        if not repaired:
+            rho, p = match.rho, match.p
+            feasible, swaps = False, match.swaps
+            unmatched = match.unmatched
+    else:
+        rho, p, feasible, unmatched = _greedy_fallback(
+            sys, state, tele,
+            injected=bool(faults is not None and faults.fail_matching),
+            reason=matching_reason or "unknown")
+        swaps = 0
+        fallbacks.append("matching->greedy")
+
     with tele.stage("selection"):
         delta = tele.block(selection_mod.solve_selection(
             sys, state.sigma, state.sigma_mask, method=selection_method,
             steps=gp_steps, step0=gp_step0, telemetry=tele))
-    return _finish(sys, match.rho, match.p, delta, state,
-                   feasible=match.feasible, swaps=match.swaps,
-                   telemetry=tele)
+    return _finish(sys, rho, p, delta, state, feasible=feasible,
+                   swaps=swaps, unmatched=unmatched,
+                   fallbacks=tuple(fallbacks), telemetry=tele)
 
 
 # --------------------------------------------------------------------------

@@ -46,6 +46,13 @@ class MatchingResult:
     swaps: int
     sweeps: int
     feasible: bool
+    #: available devices left without an RB (partial matching: more
+    #: available devices than N*Q slots).  Empty when every available
+    #: device was matched; the round can still proceed — unmatched
+    #: devices simply cannot upload (their alpha-weighted IPW term is
+    #: handled by the resilience layer in ``repro.fed.rounds``).
+    unmatched: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int64))
 
 
 def _rb_cost(sys: SystemParams, members: np.ndarray, h: np.ndarray,
@@ -125,7 +132,15 @@ def swap_matching(sys: SystemParams, h, alpha, evaluator: str = "closed_form",
     for k in order:
         open_rbs = np.flatnonzero(slots > 0)
         if open_rbs.size == 0:
-            break  # more available devices than N*Q slots: infeasible round
+            # More available devices than N*Q slots: Definition 1 cannot
+            # be satisfied, so the matching is *partial* — the remaining
+            # devices stay at assign == -1 and are reported in
+            # ``MatchingResult.unmatched`` (and counted in the
+            # ``feel_matching_unmatched_total`` /
+            # ``feel_solver_infeasible_total`` metrics below) instead of
+            # being silently skipped.  The round still proceeds with the
+            # devices that did get an RB.
+            break
         n = open_rbs[np.argmax(h[k, open_rbs])]
         assign[k] = n
         slots[n] -= 1
@@ -197,10 +212,15 @@ def swap_matching(sys: SystemParams, h, alpha, evaluator: str = "closed_form",
         p = tele.block(p)
     all_matched = bool(np.all(assign[avail] >= 0)) if avail.size else True
     feasible = ok and all_matched and np.isfinite(cost)
-    unmatched = int(np.sum(~matched[avail])) if avail.size else 0
+    unmatched_ids = (avail[assign[avail] < 0] if avail.size
+                     else np.zeros(0, np.int64))
+    unmatched = int(unmatched_ids.size)
     tele.solver("matching", swaps=swaps, sweeps=sweeps,
                 rb_evals=scorer.evals, unmatched=unmatched,
                 feasible=bool(feasible))
+    if unmatched:
+        tele.fault("partial_matching", injected=False,
+                   unmatched=[int(k) for k in unmatched_ids])
     reg = metrics_mod.get_default()
     if reg.enabled:
         reg.counter("feel_matching_calls_total",
@@ -219,4 +239,4 @@ def swap_matching(sys: SystemParams, h, alpha, evaluator: str = "closed_form",
                             1, solver="matching")
     return MatchingResult(assign=assign, rho=rho, p=np.asarray(p),
                           cost=cost, swaps=swaps, sweeps=sweeps,
-                          feasible=feasible)
+                          feasible=feasible, unmatched=unmatched_ids)

@@ -161,10 +161,14 @@ def _inner_solve(sys: SystemParams, p_v: Array, rho: Array, h: Array,
             H = H + jnp.eye(H.shape[0], dtype=H.dtype) * 1e-9
             try:
                 step = jnp.linalg.solve(H, g)
-            except Exception:  # pragma: no cover - singular fallback
+            except np.linalg.LinAlgError:  # pragma: no cover - singular
                 step = g
+                _count_singular_newton()
             if not bool(jnp.all(jnp.isfinite(step))):
+                # jnp.linalg.solve signals a singular system with
+                # non-finite entries rather than raising; same fallback
                 step = g
+                _count_singular_newton()
             # backtracking line search keeping strict feasibility
             f0 = float(phi_jit(pvec, t))
             a = 1.0
@@ -239,6 +243,64 @@ def allocate_power(sys: SystemParams, rho: Array, h: Array, alpha: Array,
         _count_power(method, bool(res.feasible), res.iterations)
         return res.p, cost, res.feasible
     raise ValueError(f"unknown power method: {method}")
+
+
+def allocate_power_safe(sys: SystemParams, rho: Array, h: Array,
+                        alpha: Array, method: str = "closed_form",
+                        telemetry=None, force_fail: bool = False):
+    """``allocate_power`` with the fallback chain of docs/robustness.md.
+
+    A failed CCP solve (exception, non-finite powers, infeasible
+    outcome) — or a fault-plan ``force_fail`` — degrades to the exact
+    closed-form evaluator instead of propagating; the degradation is
+    recorded as a ``fault`` trace event and counted in
+    ``feel_fallbacks_total``.  The closed form is the chain's terminal
+    link: it cannot raise, and its infeasibility is an honest property
+    of the assignment, reported via the ``feasible`` flag as before.
+
+    Returns ``(p, cost, feasible, fallback)`` where ``fallback`` is
+    None or the degradation label (e.g. ``"ccp->closed_form"``).
+    """
+    tele = obs.resolve(telemetry)
+    fallback = None
+    if method != "closed_form":
+        failure = None
+        if force_fail:
+            failure = "injected"
+        else:
+            try:
+                p, cost, ok = allocate_power(sys, rho, h, alpha,
+                                             method=method, telemetry=tele)
+                if not ok:
+                    failure = "infeasible"
+                elif not bool(jnp.all(jnp.isfinite(p))):
+                    failure = "non_finite"
+                else:
+                    return p, cost, ok, None
+            except Exception as e:  # solver blew up: degrade, don't die
+                failure = type(e).__name__
+        fallback = f"{method}->closed_form"
+        tele.fault("fallback", injected=force_fail, solver="power",
+                   to="closed_form", reason=failure)
+        reg = metrics_mod.get_default()
+        if reg.enabled:
+            reg.counter("feel_fallbacks_total",
+                        "solver degradations by solver and target").inc(
+                            1, solver="power", to="closed_form")
+    p, cost, ok = allocate_power(sys, rho, h, alpha, method="closed_form",
+                                 telemetry=tele)
+    return p, cost, ok, fallback
+
+
+def _count_singular_newton() -> None:
+    """A singular Newton system inside the CCP inner solve degraded the
+    step to plain gradient descent — silent before, now visible via the
+    existing infeasible-call metric."""
+    reg = metrics_mod.get_default()
+    if reg.enabled:
+        reg.counter("feel_solver_infeasible_total",
+                    "infeasible solver outcomes by solver").inc(
+                        1, solver="power_newton")
 
 
 def _count_power(method: str, feasible: bool, ccp_iterations: int) -> None:

@@ -1,6 +1,11 @@
 from .client import local_gradient, per_sample_sigma
-from .server import aggregate_gradients
-from .rounds import FEELConfig, FEELTrainer, RoundMetrics
+from .faults import CHAOS_SPEC, FaultPlan, FaultSpec, RoundFaults
+from .server import aggregate_gradients, ipw_mass, ipw_weights
+from .rounds import (FEELConfig, FEELTrainer, ResilienceConfig,
+                     RoundMetrics)
 
 __all__ = ["local_gradient", "per_sample_sigma", "aggregate_gradients",
-           "FEELConfig", "FEELTrainer", "RoundMetrics"]
+           "ipw_mass", "ipw_weights",
+           "FEELConfig", "FEELTrainer", "RoundMetrics",
+           "ResilienceConfig", "FaultSpec", "FaultPlan", "RoundFaults",
+           "CHAOS_SPEC"]

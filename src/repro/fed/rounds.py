@@ -16,13 +16,15 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 import time
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import checkpoint as ckpt_mod
 from .. import obs, optim
 from ..obs import metrics as metrics_mod
 from ..core import cost as cost_mod
@@ -30,9 +32,13 @@ from ..core import joint as joint_mod
 from ..core.types import RoundState, SystemParams
 from ..data.federated import FederatedDataset
 from . import client as client_mod
+from . import faults as faults_mod
 from . import server as server_mod
 
 Array = jax.Array
+
+#: checkpoint file prefix inside a checkpoint directory.
+CKPT_NAME = "feel_ckpt"
 
 
 @dataclasses.dataclass
@@ -54,6 +60,36 @@ class FEELConfig:
 
 
 @dataclasses.dataclass
+class ResilienceConfig:
+    """Knobs of the fault-tolerance layer (docs/robustness.md).
+
+    Passing one to ``FEELTrainer`` (or passing a ``FaultPlan``) turns
+    the resilience policies on; with the defaults and no materialized
+    fault every round stays bit-for-bit identical to a plain run.
+    """
+
+    #: upload deadline in seconds; None derives 1.5 x the slowest
+    #: clean completion max_k(tau_k) + T (eqs. 8 + 16 latency model).
+    deadline_s: Optional[float] = None
+    #: bounded retries for a straggling upload before it is dropped.
+    max_retries: int = 2
+    #: exponential backoff: retry t waits until deadline * base**t.
+    backoff_base: float = 2.0
+    #: mid-round dropout handling: "reweight" renormalizes the IPW
+    #: aggregation over survivors; "resolve" additionally re-solves the
+    #: RB assignment for the survivor set (cost accounting follows).
+    dropout_policy: str = "reweight"
+    #: consecutive non-finite uploads before a device is quarantined.
+    quarantine_threshold: int = 2
+    #: rounds a quarantined device sits out; each clean upload
+    #: afterwards decays one strike (skip-with-decay).
+    quarantine_rounds: int = 3
+    #: checkpoint every N rounds (0 = never) into checkpoint_dir.
+    checkpoint_every: int = 0
+    checkpoint_dir: Optional[str] = None
+
+
+@dataclasses.dataclass
 class RoundMetrics:
     round: int
     net_cost: float
@@ -63,6 +99,11 @@ class RoundMetrics:
     n_uploaded: int
     frac_mislabeled_selected: float
     test_acc: Optional[float] = None
+    n_dropped: int = 0          # scheduled uploads lost this round
+    n_quarantined: int = 0      # devices sitting out this round
+    n_retries: int = 0          # straggler retry attempts this round
+    skipped_update: bool = False  # no usable upload -> no optimizer step
+    fallbacks: tuple = ()       # solver degradations (RoundDecision)
 
 
 class FEELTrainer:
@@ -71,7 +112,10 @@ class FEELTrainer:
     def __init__(self, sys: SystemParams, data: FederatedDataset,
                  model, params, cfg: FEELConfig,
                  telemetry: Optional[obs.NullTelemetry] = None,
-                 monitor: Optional["obs.ConvergenceMonitor"] = None):
+                 monitor: Optional["obs.ConvergenceMonitor"] = None,
+                 faults: Optional[Union["faults_mod.FaultPlan",
+                                        "faults_mod.FaultSpec"]] = None,
+                 resilience: Optional[ResilienceConfig] = None):
         """``model`` exposes features(params, x), apply, loss_fn, accuracy.
 
         ``telemetry``: an ``obs`` sink for the round-level trace; the
@@ -84,6 +128,16 @@ class FEELTrainer:
         skips every monitor code path — round outputs stay bit-for-bit
         identical.  Metrics flow to the process-default registry
         (``obs.metrics.set_default``), also a no-op unless installed.
+
+        ``faults``: a ``repro.fed.faults.FaultPlan`` (or its spec)
+        injecting post-matching dropout, straggler delays, NaN uploads
+        and forced solver failures — deterministic and replayable.
+
+        ``resilience``: a ``ResilienceConfig`` with the policy knobs
+        (deadline/retry/backoff, dropout policy, quarantine,
+        checkpointing).  Either argument activates the resilience
+        layer; ``None``+``None`` (default) keeps every round bit-for-
+        bit identical to the pre-fault-tolerance trainer.
         """
         self.sys = sys
         self.data = data
@@ -92,6 +146,17 @@ class FEELTrainer:
         self.cfg = cfg
         self.obs = obs.resolve(telemetry)
         self.monitor = monitor
+        if isinstance(faults, faults_mod.FaultSpec):
+            faults = faults_mod.FaultPlan(faults)
+        self.faults = faults
+        self.resilience = resilience
+        self._resilient = faults is not None or resilience is not None
+        self._res = resilience if resilience is not None \
+            else ResilienceConfig()
+        self._strikes = np.zeros(sys.K, np.int64)
+        self._quarantined_until = np.zeros(sys.K, np.int64)
+        self._start_round = 0
+        self._cum = 0.0
         self._profiled: set = set()
         self.rng = np.random.default_rng(cfg.seed)
         self.key = jax.random.PRNGKey(cfg.seed)
@@ -170,6 +235,8 @@ class FEELTrainer:
         t_round = time.perf_counter()
         tele.begin_round(i)
         ev0 = len(tele.events) if tele.enabled else 0
+        rf = (self.faults.for_round(i, sys.K)
+              if self.faults is not None else None)
 
         with tele.stage("data"):
             images, labels, true = self._gather_round_batches()
@@ -183,6 +250,14 @@ class FEELTrainer:
         h = jax.random.exponential(kh, (sys.K, sys.N)) * 1e-5
         alpha = (jax.random.uniform(ka, (sys.K,)) < sys.eps
                  ).astype(jnp.float32)
+        n_quarantined = 0
+        if self._resilient:
+            # quarantined devices sit the round out *before* the solve,
+            # so no RB/power is allocated to them (skip-with-decay)
+            quarantined = self._quarantined_until > i
+            n_quarantined = int(np.sum(quarantined))
+            if n_quarantined:
+                alpha = alpha * jnp.asarray(~quarantined, jnp.float32)
         mask = jnp.ones_like(sigma)
         state = RoundState(h=h, alpha=alpha, sigma=sigma, sigma_mask=mask)
 
@@ -196,12 +271,15 @@ class FEELTrainer:
             dec = joint_mod._finish(sys, match.rho, match.p,
                                     np.asarray(mask), state,
                                     feasible=match.feasible,
-                                    swaps=match.swaps, telemetry=tele)
+                                    swaps=match.swaps,
+                                    unmatched=match.unmatched,
+                                    telemetry=tele)
         elif cfg.scheme == "proposed":
             dec = joint_mod.proposed_scheme(
                 sys, state, selection_method=cfg.selection_method,
                 power_evaluator=cfg.power_evaluator, gp_steps=cfg.gp_steps,
-                gp_step0=cfg.gp_step0, telemetry=tele)
+                gp_step0=cfg.gp_step0, faults=rf,
+                repair_infeasible=self._resilient, telemetry=tele)
         elif cfg.scheme.startswith("baseline"):
             dec = joint_mod.baseline_scheme(sys, state,
                                             int(cfg.scheme[-1]), key=kb,
@@ -241,16 +319,64 @@ class FEELTrainer:
                                           delta)
             grads = tele.block(grads)
 
+        # ---- fault application + resilience policies ------------------
+        planned = np.asarray(uploaded) > 0
+        surv = planned
+        n_dropped = n_retries = 0
+        if self._resilient:
+            surv, n_dropped, n_retries = self._upload_outcomes(
+                i, rf, planned, tele)
+            grads = self._inject_nan_uploads(rf, surv, grads, tele)
+            surv, n_bad = self._screen_nonfinite(i, rf, surv, grads, tele)
+            n_dropped += n_bad
+
         g_norm_sq = None
+        skipped_update = False
         with tele.stage("aggregate"):
-            g_hat = server_mod.aggregate_gradients(sys, grads, uploaded)
-            if self.monitor is not None:
-                g_norm_sq = float(sum(jnp.vdot(x, x)
-                                      for x in jax.tree.leaves(g_hat)))
-            updates, self.opt_state = self.opt.update(g_hat, self.opt_state,
-                                                      self.params)
-            self.params = tele.block(optim.apply_updates(self.params,
-                                                         updates))
+            if self._resilient and not np.array_equal(surv, planned):
+                surv_j = jnp.asarray(surv, jnp.float32)
+                if self._res.dropout_policy == "resolve" and surv.any():
+                    dec = self._resolve_for_survivors(state, surv_j, dec,
+                                                      tele)
+                # zero the lost uploads before the weighted sum: their
+                # IPW weight is 0, but 0 * NaN would still poison it
+                surv_b = jnp.asarray(surv)
+
+                def scrub(leaf):
+                    shape = (sys.K,) + (1,) * (leaf.ndim - 1)
+                    return jnp.where(surv_b.reshape(shape), leaf, 0.0)
+
+                grads = jax.tree.map(scrub, grads)
+                # IPW-consistent reweighting over the survivor set
+                g_hat = server_mod.aggregate_gradients(sys, grads, surv_j,
+                                                       renormalize=True)
+                mass = server_mod.ipw_mass(sys, surv_j)
+            else:
+                # clean round: the exact pre-fault-tolerance aggregation
+                g_hat = server_mod.aggregate_gradients(sys, grads,
+                                                       uploaded)
+                mass = server_mod.ipw_mass(sys, uploaded)
+            if mass <= 0.0:
+                # every upload was lost (or none was scheduled): applying
+                # the zero/NaN step would still move Adam's state, so the
+                # update is skipped and recorded instead
+                skipped_update = True
+                g_norm_sq = 0.0 if self.monitor is not None else None
+                tele.fault("skip_update", injected=False,
+                           reason="no_surviving_upload")
+                reg0 = metrics_mod.get_default()
+                if reg0.enabled:
+                    reg0.counter("feel_rounds_skipped_total",
+                                 "rounds whose optimizer update was "
+                                 "skipped (no usable upload)").inc()
+            else:
+                if self.monitor is not None:
+                    g_norm_sq = float(sum(jnp.vdot(x, x)
+                                          for x in jax.tree.leaves(g_hat)))
+                updates, self.opt_state = self.opt.update(
+                    g_hat, self.opt_state, self.params)
+                self.params = tele.block(optim.apply_updates(self.params,
+                                                             updates))
 
         sel = np.asarray(delta) > 0.5
         mislabeled = (np.asarray(labels) != true)
@@ -261,15 +387,15 @@ class FEELTrainer:
                 acc = tele.block(self.model.accuracy(
                     self.params, self.data.test_images,
                     self.data.test_labels))
-        self._cum = getattr(self, "_cum", 0.0) + dec.net_cost
-        n_uploaded = int(np.sum(np.asarray(uploaded)))
+        self._cum = self._cum + dec.net_cost
+        n_uploaded = int(np.sum(surv))
         reg = metrics_mod.get_default()
         wall_s = time.perf_counter() - t_round
         if tele.enabled or reg.enabled:
             e_cmp, e_com = self._energy_terms(dec)
             if tele.enabled:
                 self._record_round(tele, dec, sel, mislabeled,
-                                   np.asarray(uploaded), acc, wall_s,
+                                   surv.astype(np.int64), acc, wall_s,
                                    e_cmp, e_com)
             if reg.enabled:
                 self._record_metrics(reg, dec, e_cmp, e_com,
@@ -285,12 +411,25 @@ class FEELTrainer:
                 i, gap=gap_proxy, g_norm_sq=g_norm_sq, eta=cfg.lr,
                 delta_obj=float(dec.delta_obj), wall_s=wall_s,
                 stage_s=stage_s)
+        if (self._res.checkpoint_every > 0 and self._res.checkpoint_dir
+                and (i + 1) % self._res.checkpoint_every == 0):
+            path = self.save_checkpoint(next_round=i + 1)
+            tele.fault("checkpoint", injected=False, path=path,
+                       next_round=i + 1)
+            if reg.enabled:
+                reg.counter("feel_checkpoints_total",
+                            "periodic trainer checkpoints written").inc()
         return RoundMetrics(round=i, net_cost=dec.net_cost,
                             cum_net_cost=self._cum,
                             delta_obj=dec.delta_obj,
                             n_selected=int(np.sum(sel)),
                             n_uploaded=n_uploaded,
-                            frac_mislabeled_selected=frac_bad, test_acc=acc)
+                            frac_mislabeled_selected=frac_bad,
+                            test_acc=acc, n_dropped=n_dropped,
+                            n_quarantined=n_quarantined,
+                            n_retries=n_retries,
+                            skipped_update=skipped_update,
+                            fallbacks=dec.fallbacks)
 
     def _profile_once(self, name: str, stage: str, fn, args, tele,
                       round_i: int) -> None:
@@ -367,9 +506,221 @@ class FEELTrainer:
                   "per-round upload latency budget T (eq. 16)").set(
                       float(self.sys.T))
 
+    # ------------------------------------------------------------------
+    # fault-tolerance layer (docs/robustness.md)
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _count_injected(kind: str, n: int = 1) -> None:
+        reg = metrics_mod.get_default()
+        if reg.enabled and n:
+            reg.counter("feel_faults_injected_total",
+                        "faults injected by the FaultPlan, by kind").inc(
+                            n, kind=kind)
+
+    def _upload_outcomes(self, i: int, rf, planned: np.ndarray, tele):
+        """Apply post-matching dropout and the straggler deadline with
+        bounded retry + exponential backoff.  Returns the surviving
+        upload mask plus (dropped, retry) counts."""
+        res = self._res
+        surv = planned.copy()
+        n_dropped = n_retries = 0
+        if rf is not None and rf.dropout.any():
+            lost = planned & rf.dropout
+            for k in np.flatnonzero(lost):
+                tele.fault("dropout", injected=True, device=int(k))
+            self._count_injected("dropout", int(lost.sum()))
+            surv &= ~lost
+            n_dropped += int(lost.sum())
+        # upload completion per the eq. (8)+(16) latency model: compute
+        # time tau_k plus the T-second upload slot, plus injected delay
+        tau = np.asarray(cost_mod.compute_time(self.sys), np.float64)
+        T = float(self.sys.T)
+        deadline = (res.deadline_s if res.deadline_s is not None
+                    else 1.5 * float(tau.max() + T))
+        delays = rf.delay_s if rf is not None else np.zeros(self.sys.K)
+        for k in np.flatnonzero(surv):
+            if tau[k] + T + float(delays[k]) <= deadline:
+                continue
+            injected = bool(rf is not None and rf.straggler[k])
+            ok = False
+            for t in range(1, res.max_retries + 1):
+                n_retries += 1
+                window = deadline * res.backoff_base ** t
+                d_t = (self.faults.retry_delay_s(i, int(k), t)
+                       if self.faults is not None else 0.0)
+                tele.fault("retry", injected=injected, device=int(k),
+                           attempt=t, delay_s=d_t, window_s=window)
+                if tau[k] + T + d_t <= window:
+                    ok = True
+                    break
+            tele.fault("straggler", injected=injected, device=int(k),
+                       delay_s=float(delays[k]), dropped=not ok,
+                       retries=n_retries)
+            if injected:
+                self._count_injected("straggler")
+            if not ok:
+                surv[k] = False
+                n_dropped += 1
+        reg = metrics_mod.get_default()
+        if reg.enabled:
+            if n_retries:
+                reg.counter("feel_retries_total",
+                            "straggler upload retry attempts").inc(
+                                n_retries)
+            if n_dropped:
+                reg.counter("feel_dropouts_total",
+                            "scheduled uploads lost mid-round").inc(
+                                n_dropped)
+        return surv, n_dropped, n_retries
+
+    def _inject_nan_uploads(self, rf, surv: np.ndarray, grads, tele):
+        """Corrupt the gradient upload of fault-plan-selected devices
+        with NaNs (the defense then has to catch real NaNs)."""
+        if rf is None or not bool((rf.nan_upload & surv).any()):
+            return grads
+        bad = rf.nan_upload & surv
+        self._count_injected("nan_upload", int(bad.sum()))
+        bad_j = jnp.asarray(bad)
+
+        def corrupt(leaf):
+            shape = (self.sys.K,) + (1,) * (leaf.ndim - 1)
+            return jnp.where(bad_j.reshape(shape), jnp.nan, leaf)
+
+        return jax.tree.map(corrupt, grads)
+
+    def _screen_nonfinite(self, i: int, rf, surv: np.ndarray, grads,
+                          tele):
+        """Exclude non-finite uploads from aggregation and run the
+        per-device quarantine (skip-with-decay) bookkeeping."""
+        K = self.sys.K
+        finite = np.ones(K, bool)
+        for leaf in jax.tree.leaves(grads):
+            ax = tuple(range(1, leaf.ndim))
+            finite &= np.asarray(jnp.all(jnp.isfinite(leaf), axis=ax))
+        bad = surv & ~finite
+        clean = surv & finite
+        res = self._res
+        reg = metrics_mod.get_default()
+        if bad.any() and reg.enabled:
+            reg.counter("feel_nan_uploads_total",
+                        "uploads excluded for non-finite values").inc(
+                            int(bad.sum()))
+        for k in np.flatnonzero(bad):
+            self._strikes[k] += 1
+            injected = bool(rf is not None and rf.nan_upload[k])
+            tele.fault("nan_upload", injected=injected, device=int(k),
+                       strikes=int(self._strikes[k]))
+            if self._strikes[k] >= res.quarantine_threshold:
+                until = i + 1 + res.quarantine_rounds
+                self._quarantined_until[k] = until
+                self._strikes[k] = 0
+                tele.fault("quarantine", injected=False, device=int(k),
+                           until_round=int(until))
+                if reg.enabled:
+                    reg.counter("feel_quarantines_total",
+                                "devices quarantined for repeated "
+                                "non-finite uploads").inc()
+        # each clean upload decays one strike
+        self._strikes[clean] = np.maximum(self._strikes[clean] - 1, 0)
+        return surv & finite, int(bad.sum())
+
+    def _resolve_for_survivors(self, state, surv_j, dec, tele):
+        """Dropout policy "resolve": cheaply re-solve the RB assignment
+        for the surviving devices so energy/cost accounting matches who
+        actually uploaded.  Falls back to keeping the original decision
+        (reweight-only) if the re-solve itself fails."""
+        sys = self.sys
+        try:
+            match2 = joint_mod.matching_mod.swap_matching(
+                sys, state.h, surv_j, evaluator="closed_form",
+                telemetry=tele)
+        except Exception as e:  # keep the round alive
+            tele.fault("solver_fail", injected=False, solver="matching",
+                       reason=type(e).__name__, context="resolve")
+            return dec
+        tele.fault("fallback", injected=False, solver="matching",
+                   to="resolve_survivors")
+        reg = metrics_mod.get_default()
+        if reg.enabled:
+            reg.counter("feel_fallbacks_total",
+                        "solver degradations by solver and target").inc(
+                            1, solver="matching", to="resolve_survivors")
+        return joint_mod._finish(
+            sys, match2.rho, match2.p, dec.delta, state,
+            feasible=match2.feasible, swaps=dec.swaps,
+            unmatched=match2.unmatched,
+            fallbacks=dec.fallbacks + ("resolve_survivors",),
+            telemetry=tele)
+
+    # ------------------------------------------------------------------
+    # crash-safe checkpoint / resume (docs/robustness.md)
+    # ------------------------------------------------------------------
+    def save_checkpoint(self, path: Optional[str] = None,
+                        next_round: int = 0) -> str:
+        """Atomically persist everything ``resume`` needs to reproduce
+        the uninterrupted trajectory bit-for-bit: params, optimizer
+        state, both RNG streams, the round index, cumulative cost and
+        the quarantine bookkeeping."""
+        if path is None:
+            if not self._res.checkpoint_dir:
+                raise ValueError("no checkpoint path: pass one or set "
+                                 "ResilienceConfig.checkpoint_dir")
+            path = os.path.join(self._res.checkpoint_dir, CKPT_NAME)
+        meta = {
+            "next_round": int(next_round),
+            "cum_net_cost": float(self._cum),
+            "rng_state": self.rng.bit_generator.state,
+            "jax_key": np.asarray(self.key).tolist(),
+            "strikes": [int(v) for v in self._strikes],
+            "quarantined_until": [int(v) for v in self._quarantined_until],
+            "seed": int(self.cfg.seed),
+            "fault_spec": (self.faults.to_dict()
+                           if self.faults is not None else None),
+        }
+        ckpt_mod.save_pytree(path, {"params": self.params,
+                                    "opt_state": self.opt_state},
+                             metadata=meta)
+        return path
+
+    def resume(self, path: Optional[str] = None) -> int:
+        """Restore a ``save_checkpoint`` state and return the round to
+        continue from (``run`` picks it up automatically).  Because the
+        fault plan, both RNG streams and the quarantine state are all
+        restored, the resumed trajectory is bit-identical to the
+        uninterrupted one."""
+        if path is None:
+            if not self._res.checkpoint_dir:
+                raise ValueError("no checkpoint path: pass one or set "
+                                 "ResilienceConfig.checkpoint_dir")
+            path = self._res.checkpoint_dir
+        if os.path.isdir(path):
+            path = os.path.join(path, CKPT_NAME)
+        like = {"params": self.params, "opt_state": self.opt_state}
+        tree = ckpt_mod.load_pytree(path, like)
+        meta = ckpt_mod.load_metadata(path)
+        if meta is None:
+            raise FileNotFoundError(f"{path}.meta.json missing — cannot "
+                                    "resume without trainer metadata")
+        self.params = tree["params"]
+        self.opt_state = tree["opt_state"]
+        self._cum = float(meta["cum_net_cost"])
+        rng = np.random.default_rng()
+        rng.bit_generator.state = meta["rng_state"]
+        self.rng = rng
+        self.key = jnp.asarray(np.asarray(meta["jax_key"], np.uint32))
+        self._strikes = np.asarray(meta["strikes"], np.int64)
+        self._quarantined_until = np.asarray(meta["quarantined_until"],
+                                             np.int64)
+        self._start_round = int(meta["next_round"])
+        self.obs.fault("resume", injected=False, path=path,
+                       next_round=self._start_round)
+        return self._start_round
+
     def run(self, rounds: int, verbose: bool = False) -> List[RoundMetrics]:
+        """Run rounds ``[start, rounds)`` where ``start`` is 0 for a
+        fresh trainer or the restored round index after ``resume()``."""
         out = []
-        for i in range(rounds):
+        for i in range(self._start_round, rounds):
             eval_now = (i % self.cfg.eval_every == 0) or i == rounds - 1
             m = self.run_round(i, eval_now=eval_now)
             out.append(m)

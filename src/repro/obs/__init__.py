@@ -31,10 +31,10 @@ or process-wide (what ``benchmarks/run.py --trace`` does)::
     obs.metrics.set_default(obs.Registry())
 """
 from . import events, metrics, monitor, profile, summary, trace  # noqa: F401
-from .events import (CANONICAL_STAGES, REQUIRED_STAGES,  # noqa: F401
-                     SCHEMA_VERSION, DeviceEvent, MetricsEvent,
-                     MonitorEvent, ProfileEvent, RoundEvent, SolverEvent,
-                     StageEvent, parse_record)
+from .events import (CANONICAL_STAGES, FAULT_KINDS,  # noqa: F401
+                     REQUIRED_STAGES, SCHEMA_VERSION, DeviceEvent,
+                     FaultEvent, MetricsEvent, MonitorEvent, ProfileEvent,
+                     RoundEvent, SolverEvent, StageEvent, parse_record)
 from .metrics import (NullRegistry, Registry,  # noqa: F401
                       render_snapshot)
 from .monitor import (ConvergenceMonitor, MonitorConfig,  # noqa: F401
@@ -48,8 +48,9 @@ from .trace import (NULL, NullTelemetry, Telemetry, annotate_fn,  # noqa: F401
 
 __all__ = [
     "SCHEMA_VERSION", "CANONICAL_STAGES", "REQUIRED_STAGES",
-    "StageEvent", "SolverEvent", "DeviceEvent", "RoundEvent",
-    "MetricsEvent", "MonitorEvent", "ProfileEvent",
+    "FAULT_KINDS", "StageEvent", "SolverEvent", "DeviceEvent",
+    "RoundEvent", "MetricsEvent", "MonitorEvent", "ProfileEvent",
+    "FaultEvent",
     "parse_record", "NullTelemetry", "Telemetry", "NULL",
     "set_default", "get_default", "resolve", "annotate_fn",
     "NullRegistry", "Registry", "render_snapshot",

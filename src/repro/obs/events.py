@@ -28,6 +28,14 @@ Schema v2 adds (all three optional — v1 traces remain readable):
              compilation (``repro.obs.profile``): HLO FLOPs, bytes
              accessed, estimated peak FLOP/s.
 
+Schema v3 adds (optional — v1/v2 traces remain readable):
+
+``fault``    one fault-tolerance event (``repro.fed.faults`` and the
+             resilience policies in ``repro.fed.rounds``): an injected
+             or observed fault (dropout, straggler, NaN upload, solver
+             failure) or the policy reaction to one (retry, fallback,
+             quarantine, skipped update, checkpoint, resume).
+
 Events deliberately serialize to *flat* dicts of JSON scalars/lists so
 a trace can be consumed with nothing but ``json.loads`` per line.
 """
@@ -36,7 +44,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Optional
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 #: canonical stage names instrumented by the FEEL round loop; sinks
 #: accept any string so callers may add their own sections.
@@ -203,6 +211,37 @@ class ProfileEvent:
                 "compile_s": self.compile_s}
 
 
+#: valid ``FaultEvent.kind`` values (see docs/robustness.md).
+FAULT_KINDS = ("dropout", "straggler", "nan_upload", "solver_fail",
+               "retry", "fallback", "quarantine", "skip_update",
+               "partial_matching", "checkpoint", "resume")
+
+
+@dataclasses.dataclass
+class FaultEvent:
+    """One fault or fault-tolerance reaction (new in schema v3).
+
+    ``kind`` is one of ``FAULT_KINDS``; ``injected`` is True when the
+    event originates from a ``repro.fed.faults.FaultPlan`` (chaos
+    testing) and False when it was observed/defensive (a naturally
+    infeasible solve, a real NaN, a policy reaction).  ``device`` is
+    the device index for per-device faults, None for round/solver-level
+    events.  ``detail`` holds JSON scalars (solver names, delays,
+    attempt counts, strike counts, checkpoint paths).
+    """
+
+    kind: str
+    injected: bool
+    round: Optional[int] = None
+    device: Optional[int] = None
+    detail: Optional[Dict[str, Any]] = None
+
+    def to_record(self) -> Dict[str, Any]:
+        return {"ev": "fault", "v": SCHEMA_VERSION, "round": self.round,
+                "kind": self.kind, "injected": self.injected,
+                "device": self.device, "detail": dict(self.detail or {})}
+
+
 def header_record(meta: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
     return {"ev": "header", "v": SCHEMA_VERSION, "meta": dict(meta or {})}
 
@@ -233,6 +272,9 @@ _KINDS = {
         bytes_accessed=r["bytes_accessed"],
         peak_flops=r.get("peak_flops", 0.0),
         compile_s=r.get("compile_s", 0.0), round=r.get("round")),
+    "fault": lambda r: FaultEvent(
+        kind=r["kind"], injected=r["injected"], round=r.get("round"),
+        device=r.get("device"), detail=r.get("detail")),
 }
 
 
@@ -241,9 +283,10 @@ def parse_record(record: Dict[str, Any]):
 
     Raises ``ValueError`` when the record's schema version is *newer*
     than this reader so we fail loudly instead of mis-aggregating a
-    future trace format.  Older versions parse fine: v2 only added
-    event kinds (``metrics``/``monitor``/``profile``), so every v1
-    record is also a valid v2 record.
+    future trace format.  Older versions parse fine: v2 added the
+    ``metrics``/``monitor``/``profile`` kinds and v3 added ``fault`` —
+    neither changed an existing kind, so every v1/v2 record is also a
+    valid v3 record.
     """
     v = record.get("v", SCHEMA_VERSION)
     if v > SCHEMA_VERSION:

@@ -21,7 +21,9 @@ Aggregation rules
   HLO FLOPs/bytes per call, achieved GFLOP/s and achieved/peak
   utilization;
 * a ``telemetry.monitor`` row when the convergence monitor raised any
-  warnings: violation counts by kind.
+  warnings: violation counts by kind;
+* a ``telemetry.faults`` row when the trace carries any schema-v3
+  ``fault`` events: counts by kind plus the injected-fault total.
 """
 from __future__ import annotations
 
@@ -89,6 +91,9 @@ class TraceSummary:
         default_factory=dict)              # kernel name -> roofline record
     monitor_counts: Dict[str, int] = dataclasses.field(
         default_factory=dict)              # violation kind -> count
+    fault_counts: Dict[str, int] = dataclasses.field(
+        default_factory=dict)              # fault kind -> count (v3)
+    faults_injected: int = 0               # of which FaultPlan-injected
     last_metrics: Optional[List[Dict[str, Any]]] = None  # last snapshot
 
     def stage_seconds(self) -> float:
@@ -130,6 +135,8 @@ def summarize(trace: Iterable[Any]) -> TraceSummary:
     dev_rounds = 0
     profiles: Dict[str, Dict[str, float]] = {}
     monitor_counts: Dict[str, int] = {}
+    fault_counts: Dict[str, int] = {}
+    faults_injected = 0
     last_metrics: Optional[List[Dict[str, Any]]] = None
 
     for r in records:
@@ -167,6 +174,9 @@ def summarize(trace: Iterable[Any]) -> TraceSummary:
                                 "peak_flops": e.peak_flops}
         elif isinstance(e, ev.MonitorEvent):
             monitor_counts[e.kind] = monitor_counts.get(e.kind, 0) + 1
+        elif isinstance(e, ev.FaultEvent):
+            fault_counts[e.kind] = fault_counts.get(e.kind, 0) + 1
+            faults_injected += int(bool(e.injected))
         elif isinstance(e, ev.MetricsEvent):
             last_metrics = e.families  # counters are cumulative: last wins
 
@@ -190,6 +200,8 @@ def summarize(trace: Iterable[Any]) -> TraceSummary:
                         infeasible_rounds=infeasible, coverage=coverage,
                         device_totals=dev_totals, profiles=profiles,
                         monitor_counts=monitor_counts,
+                        fault_counts=fault_counts,
+                        faults_injected=faults_injected,
                         last_metrics=last_metrics)
 
 
@@ -237,6 +249,11 @@ def rows(summary: TraceSummary) -> List[Tuple[str, float, str]]:
         parts = ";".join(f"{k}={v}" for k, v in
                          sorted(summary.monitor_counts.items()))
         out.append(("telemetry.monitor", 0.0, parts))
+    if summary.fault_counts:
+        parts = ";".join(f"{k}={v}" for k, v in
+                         sorted(summary.fault_counts.items()))
+        out.append(("telemetry.faults", 0.0,
+                    f"injected={summary.faults_injected};" + parts))
     return out
 
 

@@ -70,6 +70,10 @@ class NullTelemetry:
     def round_end(self, **fields: Any) -> None:
         pass
 
+    def fault(self, kind: str, injected: bool = False,
+              device: Optional[int] = None, **detail: Any) -> None:
+        pass
+
     def emit(self, event) -> None:
         pass
 
@@ -173,6 +177,12 @@ class Telemetry(NullTelemetry):
 
     def round_end(self, **fields: Any) -> None:
         self.emit(ev.RoundEvent(round=self.current_round, **fields))
+
+    def fault(self, kind: str, injected: bool = False,
+              device: Optional[int] = None, **detail: Any) -> None:
+        self.emit(ev.FaultEvent(kind=kind, injected=injected,
+                                device=device, detail=detail,
+                                round=self.current_round))
 
     def emit(self, event) -> None:
         self.events.append(event)
