@@ -210,6 +210,14 @@ def main(argv: Optional[List[str]] = None) -> None:
     for msg in fails:
         print(f"REGRESSION: {msg}", file=sys.stderr)
     if fails:
+        hint = args.trace or "head.jsonl"
+        print(f"hint: attribute the regression with\n"
+              f"  PYTHONPATH=src python -m benchmarks.regress "
+              f"--update-baseline --trace base.jsonl   # on main\n"
+              f"  PYTHONPATH=src python -m repro.obs diff base.jsonl "
+              f"{hint}\n"
+              f"which names the deepest span/solver responsible for "
+              f"each delta", file=sys.stderr)
         sys.exit(1)
     print(f"PASS: no regression vs {args.baseline} "
           f"({len(base.get('stages', {}))} stages, "

@@ -84,6 +84,9 @@ def main() -> None:
         obs.set_default(None)
         tele.close()
         obs.emit_summary(obs.summarize(tele.events))
+        print(f"trace -> {args.trace}; view it with "
+              f"`python -m repro.obs export {args.trace}` (Perfetto) or "
+              f"`python -m repro.obs dash {args.trace}`", file=sys.stderr)
     if reg is not None:
         from repro import obs
 

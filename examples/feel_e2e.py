@@ -46,6 +46,10 @@ def main():
                     help="write a repro.obs JSONL telemetry trace "
                          "(per-round stage timings, solver counters, "
                          "per-device energy) and print its summary")
+    ap.add_argument("--dash", default=None, metavar="PATH",
+                    help="with --trace: also render the trace as a "
+                         "self-contained HTML round dashboard at PATH "
+                         "(same as `python -m repro.obs dash`)")
     ap.add_argument("--monitor", action="store_true",
                     help="attach a ConvergenceMonitor checking each round "
                          "against the paper's Lemma-2 bound; print its "
@@ -156,6 +160,11 @@ def main():
         print(f"\ntelemetry trace -> {args.trace}")
         print("name,us_per_call,derived")
         obs.emit_summary(obs.summarize(tele.events))
+        if args.dash:
+            obs.write_dashboard(args.trace, args.dash)
+            print(f"round dashboard -> {args.dash}")
+        print(f"inspect: python -m repro.obs export {args.trace}  "
+              f"(Perfetto), ... diff, ... dash")
     if monitor is not None:
         s = monitor.summary()
         print(f"\nmonitor: rounds={s['rounds']} "

@@ -100,12 +100,13 @@ def _greedy_fallback(sys: SystemParams, state: RoundState, tele,
     powers.  Pure numpy + one closed-form solve — cannot raise."""
     h = np.asarray(state.h)
     alpha = np.asarray(state.alpha)
-    rho = _greedy_rb(sys, h, alpha, prefer_max=True)
-    with tele.stage("power"):
-        p, cost, ok = power_mod.allocate_power(
-            sys, jnp.asarray(rho), state.h, state.alpha,
-            method="closed_form", telemetry=tele)
-        p = tele.block(p)
+    with tele.span("joint.greedy_fallback", reason=reason):
+        rho = _greedy_rb(sys, h, alpha, prefer_max=True)
+        with tele.stage("power"):
+            p, cost, ok = power_mod.allocate_power(
+                sys, jnp.asarray(rho), state.h, state.alpha,
+                method="closed_form", telemetry=tele)
+            p = tele.block(p)
     tele.fault("fallback", injected=injected, solver="matching",
                to="greedy", reason=reason)
     _count_fallback("matching", "greedy")

@@ -126,27 +126,29 @@ def swap_matching(sys: SystemParams, h, alpha, evaluator: str = "closed_form",
     stage = tele.stage("matching")
     stage.__enter__()
     # ---- initial matching Psi_0: greedy best-gain with capacity ----
-    assign = np.full(K, -1, np.int64)
-    slots = np.full(N, Q, np.int64)
-    order = avail[np.argsort(-h[avail].max(axis=1), kind="stable")]
-    for k in order:
-        open_rbs = np.flatnonzero(slots > 0)
-        if open_rbs.size == 0:
-            # More available devices than N*Q slots: Definition 1 cannot
-            # be satisfied, so the matching is *partial* — the remaining
-            # devices stay at assign == -1 and are reported in
-            # ``MatchingResult.unmatched`` (and counted in the
-            # ``feel_matching_unmatched_total`` /
-            # ``feel_solver_infeasible_total`` metrics below) instead of
-            # being silently skipped.  The round still proceeds with the
-            # devices that did get an RB.
-            break
-        n = open_rbs[np.argmax(h[k, open_rbs])]
-        assign[k] = n
-        slots[n] -= 1
+    with tele.span("matching.init"):
+        assign = np.full(K, -1, np.int64)
+        slots = np.full(N, Q, np.int64)
+        order = avail[np.argsort(-h[avail].max(axis=1), kind="stable")]
+        for k in order:
+            open_rbs = np.flatnonzero(slots > 0)
+            if open_rbs.size == 0:
+                # More available devices than N*Q slots: Definition 1
+                # cannot be satisfied, so the matching is *partial* — the
+                # remaining devices stay at assign == -1 and are reported
+                # in ``MatchingResult.unmatched`` (and counted in the
+                # ``feel_matching_unmatched_total`` /
+                # ``feel_solver_infeasible_total`` metrics below) instead
+                # of being silently skipped.  The round still proceeds
+                # with the devices that did get an RB.
+                break
+            n = open_rbs[np.argmax(h[k, open_rbs])]
+            assign[k] = n
+            slots[n] -= 1
 
-    members = [np.flatnonzero(assign == n) for n in range(N)]
-    rb_costs = np.array([scorer.rb_cost(n, members[n]) for n in range(N)])
+        members = [np.flatnonzero(assign == n) for n in range(N)]
+        rb_costs = np.array([scorer.rb_cost(n, members[n])
+                             for n in range(N)])
 
     def try_reassign(k: int, n_from: int, n_to: int, j: Optional[int]):
         """Cost delta of moving k from n_from to n_to (swapping with j)."""
@@ -168,6 +170,10 @@ def swap_matching(sys: SystemParams, h, alpha, evaluator: str = "closed_form",
     while improved and sweeps < max_sweeps:
         improved = False
         sweeps += 1
+        # one child span per sweep: a regression in sweep count (or one
+        # pathologically slow sweep) is attributable from the trace
+        sweep_span = tele.span("matching.sweep", sweep=sweeps)
+        sweep_span.__enter__()
         for u in avail:
             if assign[u] < 0:
                 continue
@@ -196,6 +202,7 @@ def swap_matching(sys: SystemParams, h, alpha, evaluator: str = "closed_form",
                         assign[u] = n
                         swaps += 1
                         improved = True
+        sweep_span.__exit__(None, None, None)
 
     rho = np.zeros((K, N), np.float32)
     matched = assign >= 0

@@ -190,8 +190,14 @@ def _inner_solve(sys: SystemParams, p_v: Array, rho: Array, h: Array,
 
 def ccp_power(sys: SystemParams, rho: Array, h: Array, alpha: Array,
               p0: Array | None = None, n_ccp: int = 8,
-              tol: float = 1e-4) -> CCPResult:
-    """Algorithm 3: iterate the convexified subproblem until convergence."""
+              tol: float = 1e-4, telemetry=None) -> CCPResult:
+    """Algorithm 3: iterate the convexified subproblem until convergence.
+
+    ``telemetry``: an ``obs`` sink; each outer CCP iteration is recorded
+    as a ``power.ccp_iter`` span (child of the enclosing power stage),
+    so a slow/extra iteration is attributable from the trace.
+    """
+    tele = obs.resolve(telemetry)
     rho = jnp.asarray(rho, jnp.float32)
     active = rho * alpha[:, None]
     weaker = _weaker(h, active)
@@ -208,8 +214,9 @@ def ccp_power(sys: SystemParams, rho: Array, h: Array, alpha: Array,
     p = p0 * rho
     traj = [float(_upload_cost(sys, p, rho))]
     for v in range(n_ccp):
-        p_new = _inner_solve(sys, p, rho, h, alpha, weaker, mask_k)
-        traj.append(float(_upload_cost(sys, p_new, rho)))
+        with tele.span("power.ccp_iter", iter=v):
+            p_new = _inner_solve(sys, p, rho, h, alpha, weaker, mask_k)
+            traj.append(float(_upload_cost(sys, p_new, rho)))
         if abs(traj[-1] - traj[-2]) <= tol * max(abs(traj[-2]), 1e-12):
             p = p_new
             break
@@ -235,7 +242,7 @@ def allocate_power(sys: SystemParams, rho: Array, h: Array, alpha: Array,
         _count_power(method, ok, 0)
         return p, cost, ok
     if method == "ccp":
-        res = ccp_power(sys, rho, h, alpha)
+        res = ccp_power(sys, rho, h, alpha, telemetry=tele)
         cost = float(_upload_cost(sys, res.p, rho)) if res.feasible \
             else float("inf")
         tele.solver("power", method=method, iterations=res.iterations,

@@ -171,11 +171,17 @@ def solve_selection(sys: SystemParams, sigma: Array, mask: Array,
     tele = obs.resolve(telemetry)
     reg = metrics_mod.get_default()
     if method == "faithful":
-        out = faithful_selection(sys, sigma, mask, steps=steps,
-                                 step0=step0)
+        # the two Alg. 4/5 phases as child spans of the selection stage;
+        # same computation as faithful_selection (block is a no-op sync)
+        with tele.span("selection.gp", steps=steps):
+            d_cont = tele.block(gradient_projection(
+                sys, sigma, mask, steps=steps, step0=step0))
+        with tele.span("selection.recover"):
+            out = tele.block(binary_recovery(d_cont, mask))
         gp_steps = steps
     elif method == "exact":
-        out = exact_selection(sys, sigma, mask)
+        with tele.span("selection.exact"):
+            out = tele.block(exact_selection(sys, sigma, mask))
         gp_steps = 0
     else:
         raise ValueError(f"unknown selection method: {method}")

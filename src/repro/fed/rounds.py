@@ -235,6 +235,13 @@ class FEELTrainer:
         t_round = time.perf_counter()
         tele.begin_round(i)
         ev0 = len(tele.events) if tele.enabled else 0
+        # root of this round's span tree (schema v4): every stage/span
+        # opened below records it as parent, so export/diff/dash can
+        # reconstruct the full call hierarchy.  Entered manually — the
+        # span must close just before RoundMetrics is built so eval and
+        # aggregation land inside it.
+        span_round = tele.span("round")
+        span_round.__enter__()
         rf = (self.faults.for_round(i, sys.K)
               if self.faults is not None else None)
 
@@ -419,6 +426,7 @@ class FEELTrainer:
             if reg.enabled:
                 reg.counter("feel_checkpoints_total",
                             "periodic trainer checkpoints written").inc()
+        span_round.__exit__(None, None, None)
         return RoundMetrics(round=i, net_cost=dec.net_cost,
                             cum_net_cost=self._cum,
                             delta_obj=dec.delta_obj,
@@ -539,28 +547,32 @@ class FEELTrainer:
                     else 1.5 * float(tau.max() + T))
         delays = rf.delay_s if rf is not None else np.zeros(self.sys.K)
         for k in np.flatnonzero(surv):
-            if tau[k] + T + float(delays[k]) <= deadline:
-                continue
-            injected = bool(rf is not None and rf.straggler[k])
-            ok = False
-            for t in range(1, res.max_retries + 1):
-                n_retries += 1
-                window = deadline * res.backoff_base ** t
-                d_t = (self.faults.retry_delay_s(i, int(k), t)
-                       if self.faults is not None else 0.0)
-                tele.fault("retry", injected=injected, device=int(k),
-                           attempt=t, delay_s=d_t, window_s=window)
-                if tau[k] + T + d_t <= window:
-                    ok = True
-                    break
-            tele.fault("straggler", injected=injected, device=int(k),
-                       delay_s=float(delays[k]), dropped=not ok,
-                       retries=n_retries)
-            if injected:
-                self._count_injected("straggler")
-            if not ok:
-                surv[k] = False
-                n_dropped += 1
+            # one span per attempted upload: carries the device index so
+            # the Perfetto export lands it on that device's own track
+            with tele.span("device.upload", device=int(k),
+                           tau_s=float(tau[k])):
+                if tau[k] + T + float(delays[k]) <= deadline:
+                    continue
+                injected = bool(rf is not None and rf.straggler[k])
+                ok = False
+                for t in range(1, res.max_retries + 1):
+                    n_retries += 1
+                    window = deadline * res.backoff_base ** t
+                    d_t = (self.faults.retry_delay_s(i, int(k), t)
+                           if self.faults is not None else 0.0)
+                    tele.fault("retry", injected=injected, device=int(k),
+                               attempt=t, delay_s=d_t, window_s=window)
+                    if tau[k] + T + d_t <= window:
+                        ok = True
+                        break
+                tele.fault("straggler", injected=injected, device=int(k),
+                           delay_s=float(delays[k]), dropped=not ok,
+                           retries=n_retries)
+                if injected:
+                    self._count_injected("straggler")
+                if not ok:
+                    surv[k] = False
+                    n_dropped += 1
         reg = metrics_mod.get_default()
         if reg.enabled:
             if n_retries:

@@ -13,7 +13,12 @@ package answers with four layers (see docs/telemetry.md):
   gaps against the paper's Lemma 2/3 bounds and flagging divergence
   and straggler rounds;
 * ``profile`` — per-jitted-kernel FLOPs/bytes (roofline) recorded once
-  per compilation, joined against stage wall-clock by ``summary``.
+  per compilation, joined against stage wall-clock by ``summary``;
+* ``spans``/``export``/``diff``/``dash`` (schema v4) — the hierarchical
+  span tree over a trace plus its three consumers: Chrome/Perfetto
+  trace-event export, base-vs-head delta attribution, and a
+  self-contained HTML round dashboard (``python -m repro.obs
+  export|diff|dash``).
 
 Typical use::
 
@@ -30,17 +35,24 @@ or process-wide (what ``benchmarks/run.py --trace`` does)::
     obs.set_default(obs.Telemetry(path="trace.jsonl"))
     obs.metrics.set_default(obs.Registry())
 """
-from . import events, metrics, monitor, profile, summary, trace  # noqa: F401
+from . import (dash, diff, events, export, metrics,  # noqa: F401
+               monitor, profile, spans, summary, trace)
+from .dash import render_dashboard, write_dashboard  # noqa: F401
+from .diff import TraceDiff, diff_traces  # noqa: F401
 from .events import (CANONICAL_STAGES, FAULT_KINDS,  # noqa: F401
                      REQUIRED_STAGES, SCHEMA_VERSION, DeviceEvent,
                      FaultEvent, MetricsEvent, MonitorEvent, ProfileEvent,
-                     RoundEvent, SolverEvent, StageEvent, parse_record)
+                     RoundEvent, SolverEvent, SpanEvent, StageEvent,
+                     parse_record)
+from .export import export_file, to_chrome_trace  # noqa: F401
 from .metrics import (NullRegistry, Registry,  # noqa: F401
                       render_snapshot)
 from .monitor import (ConvergenceMonitor, MonitorConfig,  # noqa: F401
                       Violation)
 from .profile import (KernelProfile, cost_of, peak_flops,  # noqa: F401
                       profile_jitted)
+from .spans import (SpanNode, build_tree, iter_spans,  # noqa: F401
+                    self_seconds_by_path)
 from .summary import load_trace, rows, summarize  # noqa: F401
 from .summary import emit as emit_summary  # noqa: F401
 from .trace import (NULL, NullTelemetry, Telemetry, annotate_fn,  # noqa: F401
@@ -50,11 +62,14 @@ __all__ = [
     "SCHEMA_VERSION", "CANONICAL_STAGES", "REQUIRED_STAGES",
     "FAULT_KINDS", "StageEvent", "SolverEvent", "DeviceEvent",
     "RoundEvent", "MetricsEvent", "MonitorEvent", "ProfileEvent",
-    "FaultEvent",
+    "FaultEvent", "SpanEvent",
     "parse_record", "NullTelemetry", "Telemetry", "NULL",
     "set_default", "get_default", "resolve", "annotate_fn",
     "NullRegistry", "Registry", "render_snapshot",
     "ConvergenceMonitor", "MonitorConfig", "Violation",
     "KernelProfile", "cost_of", "peak_flops", "profile_jitted",
     "load_trace", "summarize", "rows", "emit_summary",
+    "SpanNode", "build_tree", "iter_spans", "self_seconds_by_path",
+    "to_chrome_trace", "export_file", "TraceDiff", "diff_traces",
+    "render_dashboard", "write_dashboard",
 ]

@@ -1,7 +1,7 @@
 """Versioned event schema for the round-level telemetry trace.
 
 A trace is a JSONL file: one JSON object per line, each carrying an
-``"ev"`` discriminator and a ``"v"`` schema version.  Eight event kinds
+``"ev"`` discriminator and a ``"v"`` schema version.  Ten event kinds
 exist (see docs/telemetry.md for the field-by-field reference):
 
 ``header``   trace metadata, written once at the top of the file;
@@ -36,6 +36,22 @@ Schema v3 adds (optional — v1/v2 traces remain readable):
              failure) or the policy reaction to one (retry, fallback,
              quarantine, skipped update, checkpoint, resume).
 
+Schema v4 adds hierarchical *span* tracing (v1-v3 traces remain
+readable):
+
+``span``     one timed section in the round's span tree
+             (``Telemetry.span(name, **attrs)``): ``span_id`` /
+             ``parent_id`` link spans into a tree rooted at the round
+             span, ``attrs`` carries JSON-scalar context (device
+             index, CCP iteration, sweep number, ...);
+``stage``    records gain optional ``span_id``/``parent_id`` fields —
+             a timed stage *is* a span (``stage()`` is an alias of
+             ``span()``), so stages nest into the same tree while
+             every v1-v3 consumer keeps reading them unchanged;
+``fault``    records gain an optional ``t_s`` timestamp (seconds since
+             trace creation, same clock as ``t0_s``) so faults can be
+             placed as instant markers on an exported timeline.
+
 Events deliberately serialize to *flat* dicts of JSON scalars/lists so
 a trace can be consumed with nothing but ``json.loads`` per line.
 """
@@ -44,7 +60,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Optional
 
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 
 #: canonical stage names instrumented by the FEEL round loop; sinks
 #: accept any string so callers may add their own sections.
@@ -59,17 +75,55 @@ REQUIRED_STAGES = ("sigma", "matching", "power", "selection",
 @dataclasses.dataclass
 class StageEvent:
     """One timed section: ``dur_s`` seconds starting ``t0_s`` after
-    trace creation (monotonic clock)."""
+    trace creation (monotonic clock).
+
+    Since schema v4 a stage is also a node in the span tree:
+    ``span_id``/``parent_id`` (both None on pre-v4 records and on
+    hand-built events) link it to its enclosing span.
+    """
 
     stage: str
     t0_s: float
     dur_s: float
     round: Optional[int] = None
+    span_id: Optional[int] = None
+    parent_id: Optional[int] = None
 
     def to_record(self) -> Dict[str, Any]:
-        return {"ev": "stage", "v": SCHEMA_VERSION, "round": self.round,
-                "stage": self.stage, "t0_s": self.t0_s,
-                "dur_s": self.dur_s}
+        rec = {"ev": "stage", "v": SCHEMA_VERSION, "round": self.round,
+               "stage": self.stage, "t0_s": self.t0_s,
+               "dur_s": self.dur_s}
+        if self.span_id is not None:
+            rec["span_id"] = self.span_id
+            rec["parent_id"] = self.parent_id
+        return rec
+
+
+@dataclasses.dataclass
+class SpanEvent:
+    """One node of the hierarchical span tree (new in schema v4).
+
+    ``span_id`` is unique within a trace; ``parent_id`` is the id of
+    the enclosing span (None for a root span, e.g. the per-round
+    ``round`` span).  ``attrs`` holds JSON scalars recorded at span
+    entry (device index, CCP iteration, sweep number, solver method).
+    Emitted at span *exit*, so a trace lists children before parents;
+    ``repro.obs.spans.build_tree`` reconstructs the tree either way.
+    """
+
+    name: str
+    span_id: int
+    t0_s: float
+    dur_s: float
+    parent_id: Optional[int] = None
+    round: Optional[int] = None
+    attrs: Optional[Dict[str, Any]] = None
+
+    def to_record(self) -> Dict[str, Any]:
+        return {"ev": "span", "v": SCHEMA_VERSION, "round": self.round,
+                "name": self.name, "span_id": self.span_id,
+                "parent_id": self.parent_id, "t0_s": self.t0_s,
+                "dur_s": self.dur_s, "attrs": dict(self.attrs or {})}
 
 
 @dataclasses.dataclass
@@ -227,7 +281,10 @@ class FaultEvent:
     infeasible solve, a real NaN, a policy reaction).  ``device`` is
     the device index for per-device faults, None for round/solver-level
     events.  ``detail`` holds JSON scalars (solver names, delays,
-    attempt counts, strike counts, checkpoint paths).
+    attempt counts, strike counts, checkpoint paths).  ``t_s`` (new in
+    schema v4, None on older records) is the emission time in seconds
+    since trace creation — the same clock as ``StageEvent.t0_s`` — so
+    exporters can place the fault as an instant marker on a timeline.
     """
 
     kind: str
@@ -235,11 +292,15 @@ class FaultEvent:
     round: Optional[int] = None
     device: Optional[int] = None
     detail: Optional[Dict[str, Any]] = None
+    t_s: Optional[float] = None
 
     def to_record(self) -> Dict[str, Any]:
-        return {"ev": "fault", "v": SCHEMA_VERSION, "round": self.round,
-                "kind": self.kind, "injected": self.injected,
-                "device": self.device, "detail": dict(self.detail or {})}
+        rec = {"ev": "fault", "v": SCHEMA_VERSION, "round": self.round,
+               "kind": self.kind, "injected": self.injected,
+               "device": self.device, "detail": dict(self.detail or {})}
+        if self.t_s is not None:
+            rec["t_s"] = self.t_s
+        return rec
 
 
 def header_record(meta: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
@@ -248,7 +309,13 @@ def header_record(meta: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
 
 _KINDS = {
     "stage": lambda r: StageEvent(stage=r["stage"], t0_s=r["t0_s"],
-                                  dur_s=r["dur_s"], round=r.get("round")),
+                                  dur_s=r["dur_s"], round=r.get("round"),
+                                  span_id=r.get("span_id"),
+                                  parent_id=r.get("parent_id")),
+    "span": lambda r: SpanEvent(
+        name=r["name"], span_id=r["span_id"],
+        parent_id=r.get("parent_id"), t0_s=r["t0_s"], dur_s=r["dur_s"],
+        round=r.get("round"), attrs=r.get("attrs")),
     "solver": lambda r: SolverEvent(solver=r["solver"],
                                     counters=r["counters"],
                                     round=r.get("round")),
@@ -274,7 +341,8 @@ _KINDS = {
         compile_s=r.get("compile_s", 0.0), round=r.get("round")),
     "fault": lambda r: FaultEvent(
         kind=r["kind"], injected=r["injected"], round=r.get("round"),
-        device=r.get("device"), detail=r.get("detail")),
+        device=r.get("device"), detail=r.get("detail"),
+        t_s=r.get("t_s")),
 }
 
 
@@ -284,9 +352,11 @@ def parse_record(record: Dict[str, Any]):
     Raises ``ValueError`` when the record's schema version is *newer*
     than this reader so we fail loudly instead of mis-aggregating a
     future trace format.  Older versions parse fine: v2 added the
-    ``metrics``/``monitor``/``profile`` kinds and v3 added ``fault`` —
-    neither changed an existing kind, so every v1/v2 record is also a
-    valid v3 record.
+    ``metrics``/``monitor``/``profile`` kinds, v3 added ``fault``, and
+    v4 added ``span`` plus *optional* fields on ``stage``
+    (``span_id``/``parent_id``) and ``fault`` (``t_s``) — no existing
+    field changed meaning, so every v1-v3 record is also a valid v4
+    record.
     """
     v = record.get("v", SCHEMA_VERSION)
     if v > SCHEMA_VERSION:

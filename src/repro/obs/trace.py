@@ -9,7 +9,12 @@ Two sinks share one interface:
 * ``Telemetry`` — records events in memory and, when given a ``path``,
   streams them to a JSONL file line-by-line (partial traces survive a
   crash).  ``stage(name)`` times a ``with`` block on the monotonic
-  clock; ``block`` calls ``jax.block_until_ready`` so device work is
+  clock; ``span(name, **attrs)`` (schema v4) does the same but nests —
+  spans opened inside another span/stage record it as their parent, so
+  the trace carries the round's full call tree (see
+  ``repro.obs.spans``).  ``stage`` is the span variant that serializes
+  as the legacy ``stage`` record and feeds ``feel_stage_seconds``.
+  ``block`` calls ``jax.block_until_ready`` so device work is
   attributed to the stage that launched it rather than to whichever
   later stage happens to synchronize.
 
@@ -25,9 +30,11 @@ from __future__ import annotations
 import atexit
 import json
 import time
+import warnings
 from typing import Any, Dict, IO, Optional
 
 from . import events as ev
+from . import metrics as metrics_mod
 
 
 class _NullStage:
@@ -53,6 +60,9 @@ class NullTelemetry:
     profile: bool = False
 
     def stage(self, name: str):
+        return _NULL_STAGE
+
+    def span(self, name: str, **attrs: Any):
         return _NULL_STAGE
 
     def block(self, x):
@@ -85,34 +95,67 @@ class NullTelemetry:
 NULL = NullTelemetry()
 
 
-class _TimedStage:
-    __slots__ = ("_tele", "_name", "_t0")
+class _Span:
+    """Timed span context: allocates an id on entry, pushes itself on
+    the sink's span stack (so nested spans know their parent), and
+    emits one event on exit.  ``_TimedStage`` specializes the emitted
+    event kind; everything else is shared."""
 
-    def __init__(self, tele: "Telemetry", name: str):
+    __slots__ = ("_tele", "_name", "_attrs", "_t0", "span_id",
+                 "parent_id")
+
+    def __init__(self, tele: "Telemetry", name: str,
+                 attrs: Optional[Dict[str, Any]] = None):
         self._tele = tele
         self._name = name
+        self._attrs = attrs
 
     def __enter__(self):
+        tele = self._tele
+        self.span_id = tele._next_span_id()
+        stack = tele._span_stack
+        self.parent_id = stack[-1] if stack else None
+        stack.append(self.span_id)
         self._t0 = time.perf_counter()
         return self
 
     def __exit__(self, *exc):
         t1 = time.perf_counter()
         tele = self._tele
-        dur = t1 - self._t0
-        tele.emit(ev.StageEvent(stage=self._name,
-                                t0_s=self._t0 - tele.created_s,
-                                dur_s=dur, round=tele.current_round))
-        # mirror the duration into the process metrics registry (if one
-        # is installed) so stage latencies get p50/p95 histograms too
-        from . import metrics as metrics_mod
+        stack = tele._span_stack
+        # tolerate out-of-order exits (crash paths): pop down to self
+        while stack and stack[-1] != self.span_id:
+            stack.pop()
+        if stack:
+            stack.pop()
+        self._emit(tele, self._t0 - tele.created_s, t1 - self._t0)
+        return False
 
+    def _emit(self, tele: "Telemetry", t0_s: float, dur: float) -> None:
+        tele.emit(ev.SpanEvent(name=self._name, span_id=self.span_id,
+                               parent_id=self.parent_id, t0_s=t0_s,
+                               dur_s=dur, round=tele.current_round,
+                               attrs=self._attrs))
+
+
+class _TimedStage(_Span):
+    """A stage is a span that serializes as the legacy ``stage`` record
+    (plus the v4 span-id fields) and mirrors its duration into the
+    ``feel_stage_seconds`` histogram — every v1-v3 consumer keeps
+    working unchanged."""
+
+    __slots__ = ()
+
+    def _emit(self, tele: "Telemetry", t0_s: float, dur: float) -> None:
+        tele.emit(ev.StageEvent(stage=self._name, t0_s=t0_s, dur_s=dur,
+                                round=tele.current_round,
+                                span_id=self.span_id,
+                                parent_id=self.parent_id))
         reg = metrics_mod.get_default()
         if reg.enabled:
             reg.histogram("feel_stage_seconds",
                           "wall-clock per timed stage").observe(
                               dur, stage=self._name)
-        return False
 
 
 class Telemetry(NullTelemetry):
@@ -150,15 +193,27 @@ class Telemetry(NullTelemetry):
         self.created_s = time.perf_counter()
         self.current_round: Optional[int] = None
         self.events: list = []
+        self.dropped_writes = 0
+        self._span_stack: list = []
+        self._span_seq = 0
         self._file: Optional[IO[str]] = None
         if path is not None:
-            self._file = open(path, "w")
+            self._file = open(path, "w", encoding="utf-8")
             self._write(ev.header_record(meta))
             atexit.register(self.close)
 
     # -- recording -----------------------------------------------------
     def stage(self, name: str):
         return _TimedStage(self, name)
+
+    def span(self, name: str, **attrs: Any):
+        """Open a nested timed span; exits emit one ``SpanEvent``
+        linked to the enclosing span (stage or span) via parent id."""
+        return _Span(self, name, attrs or None)
+
+    def _next_span_id(self) -> int:
+        self._span_seq += 1
+        return self._span_seq
 
     def block(self, x):
         import jax
@@ -182,7 +237,8 @@ class Telemetry(NullTelemetry):
               device: Optional[int] = None, **detail: Any) -> None:
         self.emit(ev.FaultEvent(kind=kind, injected=injected,
                                 device=device, detail=detail,
-                                round=self.current_round))
+                                round=self.current_round,
+                                t_s=time.perf_counter() - self.created_s))
 
     def emit(self, event) -> None:
         self.events.append(event)
@@ -191,8 +247,19 @@ class Telemetry(NullTelemetry):
 
     # -- IO ------------------------------------------------------------
     def _write(self, record: Dict[str, Any]) -> None:
-        self._file.write(json.dumps(record) + "\n")
-        self._file.flush()
+        """Append one JSONL record.  A closed or failing file must
+        never crash training mid-round: the write is dropped, counted
+        in ``dropped_writes``, and the sink keeps recording in memory
+        (the first failure warns once and detaches the file)."""
+        try:
+            self._file.write(json.dumps(record) + "\n")
+            self._file.flush()
+        except (OSError, ValueError) as e:  # closed file raises ValueError
+            self.dropped_writes += 1
+            self._file = None
+            warnings.warn(f"telemetry trace write failed "
+                          f"({type(e).__name__}: {e}); further events "
+                          f"stay in memory only")
 
     def close(self) -> None:
         if self._file is not None:

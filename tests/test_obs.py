@@ -269,9 +269,14 @@ def test_full_observability_is_bit_for_bit_identical(tmp_path):
         assert ma.n_selected == mb.n_selected
         assert ma.n_uploaded == mb.n_uploaded
 
-    # and the instrumented run actually recorded everything
+    # and the instrumented run actually recorded everything — including
+    # the v4 span instrumentation (nested solver spans + round roots)
     kinds = {type(e).__name__ for e in tele.events}
     assert {"StageEvent", "SolverEvent", "RoundEvent",
-            "ProfileEvent"} <= kinds
+            "ProfileEvent", "SpanEvent"} <= kinds
+    span_names = {e.name for e in tele.events
+                  if isinstance(e, obs.SpanEvent)}
+    assert "round" in span_names
+    assert {"selection.gp", "selection.recover"} <= span_names
     assert reg.counter("feel_rounds_total").value() == 2.0
     assert inst.monitor.summary()["rounds"] == 2

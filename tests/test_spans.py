@@ -1,0 +1,338 @@
+"""Tests for the schema-v4 span layer: version round-trips, span-tree
+reconstruction on a real trainer trace, and the three consumers
+(export / diff / dash) end to end."""
+import json
+import types
+
+import jax
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import default_system
+from repro.data import SyntheticImages, non_iid_split
+from repro.fed import FEELConfig, FEELTrainer, FaultSpec
+from repro.models import cnn
+
+from tests.test_obs import _tiny_trainer
+
+
+# ----------------------------------------------------------- versioning
+
+def _v1_records():
+    """A hand-built pre-span trace (no span ids, no fault t_s)."""
+    return [
+        {"ev": "header", "v": 1, "meta": {"source": "synthetic-v1"}},
+        {"ev": "stage", "v": 1, "round": 0, "stage": "matching",
+         "t0_s": 0.0, "dur_s": 0.5},
+        {"ev": "solver", "v": 1, "round": 0, "solver": "matching",
+         "counters": {"swaps": 2}},
+        {"ev": "round", "v": 1, "round": 0, "wall_s": 1.0,
+         "net_cost": -0.5, "delta_obj": 2.0, "n_selected": 3,
+         "n_uploaded": 2, "feasible": True, "test_acc": None},
+    ]
+
+
+def _bump(records, v):
+    return [dict(r, v=v) for r in records]
+
+
+@pytest.mark.parametrize("version", [1, 2, 3, 4])
+def test_load_trace_roundtrips_all_schema_versions(tmp_path, version):
+    records = _bump(_v1_records(), version)
+    if version >= 2:
+        records.append({"ev": "fault", "v": version, "round": 0,
+                        "kind": "dropout", "injected": True, "device": 1,
+                        "detail": {}})
+    if version >= 4:
+        records.append({"ev": "span", "v": 4, "round": 0,
+                        "name": "matching.sweep", "span_id": 2,
+                        "parent_id": 1, "t0_s": 0.1, "dur_s": 0.2,
+                        "attrs": {"sweep": 1}})
+    path = tmp_path / f"v{version}.jsonl"
+    path.write_text("".join(json.dumps(r) + "\n" for r in records))
+
+    loaded = obs.load_trace(str(path))
+    assert loaded == records
+    # every record parses without error under the v4 reader
+    parsed = [obs.parse_record(r) for r in loaded]
+    assert isinstance(parsed[1], obs.StageEvent)
+    assert parsed[1].span_id is None  # legacy stages carry no span ids
+    if version >= 2:
+        fault = next(p for p in parsed if isinstance(p, obs.FaultEvent))
+        assert fault.t_s is None  # pre-v4 faults carry no timestamp
+    if version >= 4:
+        span = next(p for p in parsed if isinstance(p, obs.SpanEvent))
+        assert span.parent_id == 1 and span.attrs == {"sweep": 1}
+        # SpanEvent round-trips byte-identically through to_record
+        assert span.to_record() == records[-1]
+    s = obs.summarize(loaded)
+    assert s.n_rounds == 1 and s.stages["matching"].calls == 1
+
+
+def test_reader_rejects_future_versions():
+    with pytest.raises(ValueError):
+        obs.parse_record({"ev": "span", "v": obs.SCHEMA_VERSION + 1,
+                          "name": "x", "span_id": 1, "t0_s": 0.0,
+                          "dur_s": 0.0})
+
+
+# ----------------------------------------------------- tree construction
+
+def test_span_nesting_and_parent_tracking(tmp_path):
+    tele = obs.Telemetry(path=str(tmp_path / "t.jsonl"))
+    tele.begin_round(0)
+    with tele.stage("outer"):
+        with tele.span("mid", device=3):
+            with tele.span("leaf"):
+                pass
+        with tele.span("mid2"):
+            pass
+    tele.close()
+
+    roots, orphans = obs.build_tree(obs.load_trace(str(tmp_path
+                                                       / "t.jsonl")),
+                                    strict=True)
+    assert orphans == []
+    (outer,) = roots
+    assert outer.name == "outer" and outer.kind == "stage"
+    assert [c.name for c in outer.children] == ["mid", "mid2"]
+    (leaf,) = outer.children[0].children
+    assert leaf.path() == "outer/mid/leaf"
+    assert outer.children[0].attrs == {"device": 3}
+    # self time never goes negative and children stay inside the parent
+    for node in outer.walk():
+        assert node.self_s() >= 0.0
+        if node.parent is not None:
+            assert node.t0_s >= node.parent.t0_s - 1e-9
+
+
+def test_build_tree_strict_raises_on_orphans():
+    records = [{"ev": "span", "v": 4, "round": 0, "name": "lost",
+                "span_id": 7, "parent_id": 99, "t0_s": 0.0, "dur_s": 0.1,
+                "attrs": {}}]
+    roots, orphans = obs.build_tree(records)
+    assert roots == [] and len(orphans) == 1
+    with pytest.raises(ValueError, match="orphan"):
+        obs.build_tree(records, strict=True)
+
+
+def test_trainer_trace_builds_valid_tree(tmp_path):
+    path = str(tmp_path / "train.jsonl")
+    tele = obs.Telemetry(path=path)
+    trainer = _tiny_trainer(telemetry=tele)
+    trainer.run(2)
+    tele.close()
+
+    trace = obs.load_trace(path)
+    roots, orphans = obs.build_tree(trace, strict=True)  # no orphans
+    rounds = [r for r in roots if r.name == "round"]
+    assert [r.round for r in rounds] == [0, 1]
+    for r in rounds:
+        child_names = [c.name for c in r.children]
+        for required in obs.REQUIRED_STAGES:
+            assert required in child_names
+    # solver child spans hang under their stages, not under the round
+    paths = obs.self_seconds_by_path(trace)
+    assert "round/selection/selection.gp" in paths
+    assert "round/selection/selection.recover" in paths
+    assert "round/matching/matching.init" in paths
+    assert all(v >= 0.0 for v in paths.values())
+
+
+def test_stage_alias_keeps_metrics_histogram_working(tmp_path):
+    reg = obs.Registry()
+    obs.metrics.set_default(reg)
+    tele = obs.Telemetry()
+    tele.begin_round(0)
+    with tele.stage("sigma"):
+        pass
+    obs.metrics.set_default(None)
+    fam = [f for f in reg.snapshot()
+           if f["name"] == "feel_stage_seconds"]
+    assert fam, "stage() no longer feeds feel_stage_seconds"
+    (st,) = [e for e in tele.events if isinstance(e, obs.StageEvent)]
+    assert st.span_id is not None  # v4: stages carry span identity
+
+
+# ------------------------------------------------------------- consumers
+
+def test_export_chrome_trace_end_to_end(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    tele = obs.Telemetry(path=path, meta={"source": "test"})
+    trainer = _tiny_trainer(telemetry=tele)
+    trainer.run(2)
+    tele.close()
+
+    out = str(tmp_path / "t.json")
+    obj = obs.export_file(path, out)
+    with open(out) as f:
+        loaded = json.load(f)  # valid JSON on disk
+    assert loaded["traceEvents"] == obj["traceEvents"]
+    assert loaded["otherData"]["trace_meta"] == {"source": "test"}
+
+    complete = [e for e in obj["traceEvents"] if e["ph"] == "X"]
+    assert complete and all(e["dur"] >= 0 for e in complete)
+    assert all(e["ts"] >= 0 for e in complete)
+    rounds_tracks = {e["tid"] for e in complete}
+    assert obs.export.MAIN_TID in rounds_tracks
+    # metadata names every referenced track
+    named = {e["tid"] for e in obj["traceEvents"]
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert rounds_tracks <= named
+    # per-round counters rendered as counter events
+    assert any(e["ph"] == "C" and e["name"] == "net_cost"
+               for e in obj["traceEvents"])
+
+
+def test_export_anchors_pre_v4_faults_to_round_span(tmp_path):
+    records = [
+        {"ev": "span", "v": 4, "round": 0, "name": "round", "span_id": 1,
+         "parent_id": None, "t0_s": 0.0, "dur_s": 2.0, "attrs": {}},
+        {"ev": "fault", "v": 3, "round": 0, "kind": "dropout",
+         "injected": True, "device": 2, "detail": {}},
+        {"ev": "fault", "v": 3, "round": 5, "kind": "dropout",
+         "injected": True, "device": 2, "detail": {}},  # no round span
+    ]
+    obj = obs.to_chrome_trace(records)
+    instants = [e for e in obj["traceEvents"] if e["ph"] == "i"]
+    assert len(instants) == 1  # the unanchorable one is skipped
+    assert instants[0]["ts"] == pytest.approx(2.0 * 1e6)
+
+
+def _faulty_trainer(telemetry, fail_power: bool):
+    """Tiny trainer on the CCP evaluator; fail_power=True forces the
+    power solver down the ccp->closed_form fallback every round."""
+    train = SyntheticImages.make(200, side=8, seed=0)
+    test = SyntheticImages.make(50, side=8, seed=1)
+    data = non_iid_split(train, test, K=4, per_device=20,
+                         mislabel_prop=0.2, seed=0)
+    sys_ = default_system(K=4, N=3, Q=2, D_hat=8)
+    cfg = FEELConfig(scheme="proposed", d_hat=8, gp_steps=20,
+                     eval_every=1, power_evaluator="ccp")
+    cc = cnn.CNNConfig(side=8)
+    params = cnn.init(jax.random.PRNGKey(0), cc)
+    model = types.SimpleNamespace(features=cnn.features, apply=cnn.apply,
+                                  loss_fn=cnn.loss_fn,
+                                  accuracy=cnn.accuracy)
+    spec = FaultSpec(seed=0, power_fail_prob=1.0 if fail_power else 0.0)
+    return FEELTrainer(sys_, data, model, params, cfg,
+                       telemetry=telemetry, faults=spec)
+
+
+def test_diff_names_power_fallback_as_top_contributor(tmp_path):
+    base_path = str(tmp_path / "base.jsonl")
+    tele = obs.Telemetry(path=base_path)
+    _faulty_trainer(tele, fail_power=False).run(2)
+    tele.close()
+
+    head_path = str(tmp_path / "head.jsonl")
+    tele = obs.Telemetry(path=head_path)
+    _faulty_trainer(tele, fail_power=True).run(2)
+    tele.close()
+
+    d = obs.diff_traces(obs.load_trace(base_path),
+                        obs.load_trace(head_path))
+    assert d.faults, "forced power fallback produced no fault delta"
+    top_key = d.faults[0][0]
+    assert "power" in top_key  # the power solver is named, not a parent
+    headline = d.headline()
+    assert "power" in headline and "fault" in headline
+    rendered = d.render()
+    assert "fallback[power->closed_form]" in rendered
+    assert "headline:" in rendered
+
+
+def test_diff_of_identical_traces_is_quiet(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    tele = obs.Telemetry(path=path)
+    _tiny_trainer(telemetry=tele).run(1)
+    tele.close()
+    trace = obs.load_trace(path)
+    d = obs.diff_traces(trace, trace)
+    assert d.faults == [] and d.counters == []
+    assert d.wall_by_path == [] and d.energy_by_device == []
+    assert "equivalent" in d.headline()
+
+
+def test_dash_renders_self_contained_html(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    reg = obs.Registry()
+    obs.metrics.set_default(reg)
+    tele = obs.Telemetry(path=path, meta={"source": "test-dash"})
+    trainer = _tiny_trainer(telemetry=tele)
+    trainer.monitor = obs.ConvergenceMonitor(trainer.sys, telemetry=tele,
+                                             registry=reg)
+    trainer.run(2)
+    obs.metrics.set_default(None)
+    tele.close()
+
+    out = str(tmp_path / "report.html")
+    obs.write_dashboard(path, out)
+    with open(out, encoding="utf-8") as f:
+        page = f.read()
+    assert page.startswith("<!doctype html>")
+    assert "test-dash" in page
+    # self-contained: no external resource references of any kind
+    for needle in ("http://", "https://", "<script src", "<link",
+                   "@import", "url("):
+        assert needle not in page, f"external reference: {needle}"
+    assert "<svg" in page  # the charts are inline SVG
+    assert "round timeline" in page.lower()
+    assert "per-device energy" in page.lower()
+    # the monitor's bound-gap gauge made it into the chart section
+    assert "Convergence-bound gap" in page
+
+
+def test_cli_subcommands_run(tmp_path, capsys):
+    from repro.obs import __main__ as cli
+
+    path = str(tmp_path / "t.jsonl")
+    tele = obs.Telemetry(path=path)
+    _tiny_trainer(telemetry=tele).run(1)
+    tele.close()
+
+    cli.main(["summary", path])
+    assert "telemetry.round" in capsys.readouterr().out
+    cli.main([path])  # historic no-subcommand form
+    assert "telemetry.round" in capsys.readouterr().out
+    out_json = str(tmp_path / "t.json")
+    cli.main(["export", path, "-o", out_json])
+    assert "spans" in capsys.readouterr().out
+    with open(out_json) as f:
+        json.load(f)
+    cli.main(["diff", path, path])
+    assert "headline" in capsys.readouterr().out
+    out_html = str(tmp_path / "r.html")
+    cli.main(["dash", path, "-o", out_html])
+    capsys.readouterr()
+    assert open(out_html).read().startswith("<!doctype html>")
+
+
+# ----------------------------------------------------------- robustness
+
+def test_write_failure_drops_instead_of_crashing(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    tele = obs.Telemetry(path=path)
+    tele._file.close()  # simulate the file dying under the sink
+    with pytest.warns(UserWarning, match="trace write failed"):
+        tele.solver("power", method="closed_form", feasible=True)
+    assert tele.dropped_writes == 1
+    # sink keeps recording in memory, later writes don't warn again
+    tele.solver("power", method="closed_form", feasible=True)
+    assert tele.dropped_writes == 1  # file detached after first failure
+    assert len(tele.events) == 2
+    tele.close()
+
+
+def test_out_of_order_span_exit_is_tolerated():
+    tele = obs.Telemetry()
+    a = tele.span("a").__enter__()
+    b = tele.span("b").__enter__()
+    # a exits first (crash-path ordering); b's id is popped from the
+    # stack, and a still records its own id without raising
+    a.__exit__(None, None, None)
+    assert tele._span_stack == []
+    b.__exit__(None, None, None)
+    names = [e.name for e in tele.events]
+    assert names == ["a", "b"]
