@@ -120,10 +120,17 @@ def proposed_scheme(sys: SystemParams, state: RoundState,
                     power_evaluator: str = "closed_form",
                     gp_steps: int = 400,
                     gp_step0: float = 0.3,
+                    matching_mode: str = "auto",
+                    selection_chunk: int = 0,
                     faults=None,
                     repair_infeasible: bool = False,
                     telemetry=None) -> RoundDecision:
     """Algorithm 1 (the paper's proposed scheme).
+
+    ``matching_mode``/``selection_chunk`` select the batched solver
+    variants (core/matching.py, core/selection.py — see
+    docs/solvers.md); the defaults keep small rounds on the historical
+    scalar/full-matrix paths.
 
     ``faults``: an optional ``repro.fed.faults.RoundFaults`` whose
     ``fail_power``/``fail_matching`` flags force the corresponding
@@ -167,9 +174,11 @@ def proposed_scheme(sys: SystemParams, state: RoundState,
     else:
         matching_reason = None
         try:
-            match = matching_mod.swap_matching(sys, state.h, state.alpha,
-                                               evaluator=evaluator,
-                                               telemetry=tele)
+            match = matching_mod.swap_matching(
+                sys, state.h, state.alpha, evaluator=evaluator,
+                mode=(matching_mode if evaluator == "closed_form"
+                      else "auto"),
+                telemetry=tele)
         except Exception as e:  # degrade, don't die
             matching_reason = type(e).__name__
             tele.fault("solver_fail", injected=False, solver="matching",
@@ -185,7 +194,7 @@ def proposed_scheme(sys: SystemParams, state: RoundState,
                 try:
                     match = matching_mod.swap_matching(
                         sys, state.h, state.alpha, evaluator=evaluator,
-                        telemetry=tele)
+                        mode=matching_mode, telemetry=tele)
                 except Exception as e2:  # pragma: no cover - double fail
                     matching_reason = type(e2).__name__
 
@@ -222,7 +231,8 @@ def proposed_scheme(sys: SystemParams, state: RoundState,
     with tele.stage("selection"):
         delta = tele.block(selection_mod.solve_selection(
             sys, state.sigma, state.sigma_mask, method=selection_method,
-            steps=gp_steps, step0=gp_step0, telemetry=tele))
+            steps=gp_steps, step0=gp_step0,
+            device_chunk=selection_chunk, telemetry=tele))
     return _finish(sys, rho, p, delta, state, feasible=feasible,
                    swaps=swaps, unmatched=unmatched,
                    fallbacks=tuple(fallbacks), telemetry=tele)

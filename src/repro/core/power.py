@@ -28,6 +28,7 @@ Devices with alpha_k = 0 have no rate constraint and get p = 0.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Tuple
 
 import jax
@@ -106,9 +107,87 @@ def _g_constraints(sys: SystemParams, p: Array, p_v: Array, rho: Array,
     return jnp.sum(per_rb, axis=1) - need
 
 
+#: traced-at-trace-time compile counters for the padded barrier
+#: objective, keyed on (bucket, K, N).  ``_phi_padded`` bumps its key
+#: every time JAX *traces* it (i.e. on compilation, not on execution),
+#: so tests can assert that a second CCP solve with a different
+#: sparsity pattern but the same bucket does not recompile
+#: (tests/test_power_retrace.py).
+_INNER_TRACE_COUNTS: dict = {}
+
+
+def inner_trace_counts() -> dict:
+    """Snapshot of ``_phi_padded`` compile counts by (bucket, K, N)."""
+    return dict(_INNER_TRACE_COUNTS)
+
+
+def _bucket_size(m: int) -> int:
+    """Pad the active-variable count to the next power of two >= 4.
+
+    The padded shapes are what the jitted barrier functions key their
+    compilation cache on, so every sparsity pattern whose active count
+    lands in the same bucket reuses one compiled Newton step.
+    """
+    b = 4
+    while b < m:
+        b *= 2
+    return b
+
+
+def _phi_padded(pvec, t, vmask, ki, ni, pmax_vec, sys, p_v, rho, h,
+                alpha, weaker, mask_k):
+    """Barrier objective over a padded active set.
+
+    ``pvec``/``vmask``/``ki``/``ni``/``pmax_vec`` have static bucket
+    length; pad slots carry vmask=0, scatter to (0, 0) with zero
+    contribution (``.add`` of ``pvec*vmask``), and are excluded from
+    every barrier sum via the double-``where`` pattern so their
+    gradients are exactly zero.
+    """
+    key = (pvec.shape[0],) + tuple(p_v.shape)
+    _INNER_TRACE_COUNTS[key] = _INNER_TRACE_COUNTS.get(key, 0) + 1
+    p = jnp.zeros(p_v.shape, p_v.dtype).at[ki, ni].add(pvec * vmask)
+    g = _g_constraints(sys, p, p_v, rho, h, alpha, weaker)
+    g_act = jnp.where(mask_k > 0, g, 1.0)
+    pv_safe = jnp.where(vmask > 0, pvec, 0.5)
+    pm_safe = jnp.where(vmask > 0, pmax_vec, 1.0)
+    barrier = (-jnp.sum(jnp.where(mask_k > 0, jnp.log(g_act), 0.0))
+               - jnp.sum(jnp.where(vmask > 0, jnp.log(pv_safe), 0.0))
+               - jnp.sum(jnp.where(vmask > 0,
+                                   jnp.log(pm_safe - pv_safe), 0.0)))
+    return t * _upload_cost(sys, p, rho) + barrier
+
+
+def _feasible_padded(pvec, vmask, ki, ni, pmax_vec, sys, p_v, rho, h,
+                     alpha, weaker, mask_k):
+    """Strict interior-point feasibility of a padded candidate."""
+    p = jnp.zeros(p_v.shape, p_v.dtype).at[ki, ni].add(pvec * vmask)
+    g = _g_constraints(sys, p, p_v, rho, h, alpha, weaker)
+    ok_g = jnp.all(jnp.where(mask_k > 0, g > 0, True))
+    ok_box = (jnp.all(jnp.where(vmask > 0, pvec > 0, True))
+              & jnp.all(jnp.where(vmask > 0, pvec < pmax_vec, True)))
+    return ok_g & ok_box
+
+
+@functools.lru_cache(maxsize=None)
+def _inner_fns(bucket: int):
+    """Jitted (phi, grad, hessian, feasible) for one bucket size.
+
+    The lru_cache keeps one jit wrapper per bucket so each wrapper's
+    own compilation cache holds exactly one entry per (K, N) — module
+    level, so repeated ``_inner_solve`` calls never rebuild (and hence
+    never retrace) the closures the old implementation created per
+    call.  ``bucket`` only keys the cache; the padded shapes passed in
+    carry the actual size.
+    """
+    del bucket
+    return (jax.jit(_phi_padded), jax.jit(jax.grad(_phi_padded)),
+            jax.jit(jax.hessian(_phi_padded)), jax.jit(_feasible_padded))
+
+
 def _inner_solve(sys: SystemParams, p_v: Array, rho: Array, h: Array,
                  alpha: Array, weaker: Array, mask_k: Array,
-                 newton_iters: int = 25) -> Array:
+                 newton_iters: int = 25, pad_to: int | None = None) -> Array:
     """Solve the convex subproblem (34) with a feasible-start
     log-barrier interior-point method (damped Newton).
 
@@ -117,47 +196,47 @@ def _inner_solve(sys: SystemParams, p_v: Array, rho: Array, h: Array,
     is tiny and exact.  The barrier weight ramps geometrically; the
     final duality gap is ~(#constraints)/t_final, i.e. negligible
     relative to the upload cost by construction of the schedule.
+
+    The active index set is padded to a bucketed static length
+    (``_bucket_size``; override with ``pad_to`` — tests pass the exact
+    count to compare against the effectively-unpadded solve) and the
+    barrier objective/gradient/Hessian are module-level jits cached per
+    bucket (``_inner_fns``), so a new sparsity pattern in an existing
+    bucket re-solves without retracing.
     """
     import numpy as np
 
     ki, ni = np.nonzero(np.asarray(rho * alpha[:, None]) > 0)
-    if ki.size == 0:
+    m = ki.size
+    if m == 0:
         return jnp.zeros_like(p_v)
-    ki_j, ni_j = jnp.asarray(ki), jnp.asarray(ni)
-    pmax_vec = sys.p_max[ki_j]
-    K, N = p_v.shape
+    b = _bucket_size(m) if pad_to is None else max(int(pad_to), m)
+    pad = b - m
+    ki_j = jnp.asarray(np.concatenate([ki, np.zeros(pad, ki.dtype)]))
+    ni_j = jnp.asarray(np.concatenate([ni, np.zeros(pad, ni.dtype)]))
+    vmask = jnp.asarray(np.arange(b) < m, p_v.dtype)
+    pmax_vec = jnp.where(vmask > 0, sys.p_max[ki_j], 1.0)
 
     def to_mat(pvec):
-        return jnp.zeros((K, N), p_v.dtype).at[ki_j, ni_j].set(pvec)
+        return jnp.zeros(p_v.shape, p_v.dtype).at[ki_j, ni_j].add(
+            pvec * vmask)
 
-    def phi(pvec, t):
-        p = to_mat(pvec)
-        g = _g_constraints(sys, p, p_v, rho, h, alpha, weaker)
-        g_act = jnp.where(mask_k > 0, g, 1.0)
-        barrier = (-jnp.sum(jnp.where(mask_k > 0, jnp.log(g_act), 0.0))
-                   - jnp.sum(jnp.log(pvec))
-                   - jnp.sum(jnp.log(pmax_vec - pvec)))
-        return t * _upload_cost(sys, p, rho) + barrier
+    phi_jit, grad_fn, hess_fn, feas_fn = _inner_fns(b)
+    rest = (vmask, ki_j, ni_j, pmax_vec, sys, p_v, rho, h, alpha,
+            weaker, mask_k)
 
     def strictly_feasible(pvec):
-        p = to_mat(pvec)
-        g = _g_constraints(sys, p, p_v, rho, h, alpha, weaker)
-        ok_g = jnp.all(jnp.where(mask_k > 0, g > 0, True))
-        return bool(ok_g & jnp.all(pvec > 0) & jnp.all(pvec < pmax_vec))
-
-    grad_fn = jax.jit(jax.grad(phi))
-    hess_fn = jax.jit(jax.hessian(phi))
-    phi_jit = jax.jit(phi)
+        return bool(feas_fn(pvec, *rest))
 
     pvec = jnp.clip(p_v[ki_j, ni_j], 1e-12, pmax_vec * (1 - 1e-6))
     cost0 = max(float(_upload_cost(sys, to_mat(pvec), rho)), 1e-12)
-    n_con = ki.size * 2 + int(jnp.sum(mask_k))
+    n_con = m * 2 + int(jnp.sum(mask_k))
     t = 10.0 / cost0
     t_final = 1e7 * n_con / cost0
     while t < t_final:
         for _ in range(newton_iters):
-            g = grad_fn(pvec, t)
-            H = hess_fn(pvec, t)
+            g = grad_fn(pvec, t, *rest)
+            H = hess_fn(pvec, t, *rest)
             H = H + jnp.eye(H.shape[0], dtype=H.dtype) * 1e-9
             try:
                 step = jnp.linalg.solve(H, g)
@@ -170,13 +249,13 @@ def _inner_solve(sys: SystemParams, p_v: Array, rho: Array, h: Array,
                 step = g
                 _count_singular_newton()
             # backtracking line search keeping strict feasibility
-            f0 = float(phi_jit(pvec, t))
+            f0 = float(phi_jit(pvec, t, *rest))
             a = 1.0
             moved = False
             for _ in range(40):
                 cand = pvec - a * step
                 if strictly_feasible(cand):
-                    f1 = float(phi_jit(cand, t))
+                    f1 = float(phi_jit(cand, t, *rest))
                     if np.isfinite(f1) and f1 <= f0 - 1e-12 * abs(f0):
                         pvec = cand
                         moved = True

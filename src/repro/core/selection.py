@@ -82,10 +82,11 @@ def project_feasible(z: Array, mask: Array) -> Array:
 # Algorithm 4: gradient projection on the continuous relaxation (36).
 # --------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("steps",))
+@functools.partial(jax.jit, static_argnames=("steps", "device_chunk"))
 def gradient_projection(sys: SystemParams, sigma: Array, mask: Array,
                         steps: int = 400, step0: float = 0.3,
-                        init: Array | None = None) -> Array:
+                        init: Array | None = None,
+                        device_chunk: int = 0) -> Array:
     """Returns a stationary point delta† of (36) (continuous).
 
     step0 controls WHICH stationary point of the non-convex fractional
@@ -96,9 +97,22 @@ def gradient_projection(sys: SystemParams, sigma: Array, mask: Array,
     which under the paper's lambda degenerates to ~1 sample/device and
     stalls training (EXPERIMENTS.md §Paper-validation).  Faithful
     either way — the paper does not specify the stepsize constant.
+
+    ``device_chunk``: 0 (default) iterates the full (K, J) matrix in
+    one fori_loop — the historical path.  A positive value runs the
+    same iteration over device blocks of that size under one
+    ``lax.scan`` (via ``lax.map``), bounding peak memory to
+    O(device_chunk * J) at K=1000+ scale.  The objective (36) is
+    separable per device (DESIGN.md §4: the A_k weights fold the only
+    cross-device coupling, the |D̂| total, into per-device constants),
+    so the chunked iterates equal the full-matrix ones device for
+    device.
     """
     if init is None:
         init = 0.5 * mask
+    if device_chunk and device_chunk < sigma.shape[0]:
+        return _gp_chunked(sys, sigma, mask, steps, step0, init,
+                           device_chunk)
 
     def f(d):
         # C^com/C^cmp are constants w.r.t. delta; argmin is unchanged.
@@ -120,6 +134,58 @@ def gradient_projection(sys: SystemParams, sigma: Array, mask: Array,
     return jax.lax.fori_loop(0, steps, body, init * mask)
 
 
+def _gp_chunked(sys: SystemParams, sigma: Array, mask: Array, steps: int,
+                step0: float, init: Array, chunk: int) -> Array:
+    """Algorithm 4 over device blocks under one ``lax.map``.
+
+    The per-chunk objective is the Problem-4 selection term restricted
+    to the block, with the A_k weights (which carry the global |D̂|
+    total) precomputed once — so the block gradients, normalization and
+    projection are the same row-wise operations as the full-matrix
+    path, and the iterates match it device for device.
+    """
+    K, J = sigma.shape
+    lam = sys.lam
+    A = sys.a_weights()
+    pad = (-K) % chunk
+
+    def padk(x):
+        # padded devices have mask=0 rows: the projection pins them to 0
+        # and their objective terms vanish, so they never affect the loop
+        return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+
+    n_blocks = (K + pad) // chunk
+
+    def blocks(x):
+        return padk(x).reshape((n_blocks, chunk) + x.shape[1:])
+
+    def run_block(args):
+        sig, msk, ini, A_b, q_b = args
+
+        def f(d):
+            dm = d * msk
+            mean = (jnp.sum(dm * sig, axis=1)
+                    / jnp.maximum(jnp.sum(dm, axis=1), delta_mod._EPSDIV))
+            return (lam * jnp.sum(A_b * mean)
+                    - (1.0 - lam) * jnp.sum(q_b * jnp.sum(dm, axis=1)))
+
+        grad_f = jax.grad(f)
+
+        def body(v, d):
+            step = step0 / (1.0 + v) ** 0.6
+            g = grad_f(d)
+            g = jnp.where(jnp.isfinite(g), g, 0.0)
+            norm = jnp.max(jnp.abs(g), axis=1, keepdims=True)
+            g = g / jnp.maximum(norm, 1e-12)
+            return project_feasible(d - step * g, msk)
+
+        return jax.lax.fori_loop(0, steps, body, ini * msk)
+
+    out = jax.lax.map(run_block, (blocks(sigma), blocks(mask),
+                                  blocks(init), blocks(A), blocks(sys.q)))
+    return out.reshape(n_blocks * chunk, J)[:K]
+
+
 # --------------------------------------------------------------------------
 # Algorithm 5: binary recovery via the lambda-representation LP (39).
 # --------------------------------------------------------------------------
@@ -134,10 +200,11 @@ def binary_recovery(delta_cont: Array, mask: Array) -> Array:
 
 
 def faithful_selection(sys: SystemParams, sigma: Array, mask: Array,
-                       steps: int = 400, step0: float = 0.3) -> Array:
+                       steps: int = 400, step0: float = 0.3,
+                       device_chunk: int = 0) -> Array:
     """Algorithms 4 + 5 end to end (the paper's data-selection solver)."""
     d_cont = gradient_projection(sys, sigma, mask, steps=steps,
-                                 step0=step0)
+                                 step0=step0, device_chunk=device_chunk)
     return binary_recovery(d_cont, mask)
 
 
@@ -167,7 +234,8 @@ def exact_selection(sys: SystemParams, sigma: Array, mask: Array) -> Array:
 
 def solve_selection(sys: SystemParams, sigma: Array, mask: Array,
                     method: str = "faithful", steps: int = 400,
-                    step0: float = 0.3, telemetry=None) -> Array:
+                    step0: float = 0.3, device_chunk: int = 0,
+                    telemetry=None) -> Array:
     tele = obs.resolve(telemetry)
     reg = metrics_mod.get_default()
     if method == "faithful":
@@ -175,7 +243,8 @@ def solve_selection(sys: SystemParams, sigma: Array, mask: Array,
         # same computation as faithful_selection (block is a no-op sync)
         with tele.span("selection.gp", steps=steps):
             d_cont = tele.block(gradient_projection(
-                sys, sigma, mask, steps=steps, step0=step0))
+                sys, sigma, mask, steps=steps, step0=step0,
+                device_chunk=device_chunk))
         with tele.span("selection.recover"):
             out = tele.block(binary_recovery(d_cont, mask))
         gp_steps = steps

@@ -23,15 +23,21 @@ import jax.numpy as jnp
 Array = jax.Array
 
 
+def _head_residuals(params, images: Array, labels: Array,
+                    features_fn: Callable) -> tuple[Array, Array]:
+    """(features h, logit residuals p - y) of the linear head."""
+    h, logits = features_fn(params, images)
+    p = jax.nn.softmax(logits)
+    y = jax.nn.one_hot(labels, logits.shape[-1], dtype=p.dtype)
+    return h, p - y
+
+
 def per_sample_sigma(params, images: Array, labels: Array,
                      features_fn: Callable, method: str = "last_layer",
                      loss_fn: Callable | None = None) -> Array:
     """sigma for each sample: (B,)."""
     if method == "last_layer":
-        h, logits = features_fn(params, images)
-        p = jax.nn.softmax(logits)
-        y = jax.nn.one_hot(labels, logits.shape[-1], dtype=p.dtype)
-        d = p - y
+        h, d = _head_residuals(params, images, labels, features_fn)
         return jnp.sum(d * d, axis=-1) * (jnp.sum(h * h, axis=-1) + 1.0)
     if method == "full":
         assert loss_fn is not None
@@ -42,6 +48,26 @@ def per_sample_sigma(params, images: Array, labels: Array,
 
         return jax.vmap(one)(images, labels)
     raise ValueError(f"unknown sigma method: {method}")
+
+
+def batched_sigma(params, images: Array, labels: Array,
+                  features_fn: Callable) -> Array:
+    """All-device "last_layer" sigma in one fused pass: (K, D̂).
+
+    Flattens the (K, D̂, ...) round batch to one (K*D̂, ...) forward
+    pass and scores it with the tiled row-norm kernel
+    (``kernels.gradnorm.gradnorm_sigma``) instead of K per-device
+    elementwise reductions — the batched sigma path of the scale
+    benchmark (``fed.rounds`` selects it for
+    ``sigma_method="last_layer_kernel"``).  Equal to the vmapped
+    "last_layer" scores up to float32 reduction order.
+    """
+    from ..kernels import gradnorm as gradnorm_mod
+
+    K, D = labels.shape[:2]
+    flat = images.reshape((K * D,) + images.shape[2:])
+    h, d = _head_residuals(params, flat, labels.reshape(-1), features_fn)
+    return gradnorm_mod.gradnorm_sigma(h, d).reshape(K, D)
 
 
 def local_gradient(params, images: Array, labels: Array, delta: Array,

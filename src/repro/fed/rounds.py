@@ -45,8 +45,15 @@ CKPT_NAME = "feel_ckpt"
 class FEELConfig:
     scheme: str = "proposed"          # proposed | baseline1..baseline4
     selection_method: str = "faithful"  # faithful (Alg 4+5) | exact
-    sigma_method: str = "last_layer"    # last_layer | full
+    # last_layer | last_layer_kernel (one fused all-device pass through
+    # kernels/gradnorm) | full
+    sigma_method: str = "last_layer"
     power_evaluator: str = "closed_form"  # closed_form | ccp
+    # swap-matching sweep: auto (batched at >= AUTO_BATCH_MIN available
+    # devices) | scalar | batched — see docs/solvers.md
+    matching_mode: str = "auto"
+    # 0 = full-matrix Alg. 4; >0 = lax.map over device blocks that size
+    selection_chunk: int = 0
     optimizer: str = "adam"
     lr: float = 1e-3
     d_hat: int = 200
@@ -171,14 +178,22 @@ class FEELTrainer:
     def _build_jitted(self):
         model, cfg = self.model, self.cfg
 
-        @jax.jit
-        def sigma_all(params, images, labels):
-            """(K, D̂) sigma scores."""
-            f = functools.partial(client_mod.per_sample_sigma,
-                                  features_fn=model.features,
-                                  method=cfg.sigma_method,
-                                  loss_fn=model.loss_fn)
-            return jax.vmap(lambda im, lb: f(params, im, lb))(images, labels)
+        if cfg.sigma_method == "last_layer_kernel":
+            @jax.jit
+            def sigma_all(params, images, labels):
+                """(K, D̂) sigma via one fused all-device kernel pass."""
+                return client_mod.batched_sigma(params, images, labels,
+                                                features_fn=model.features)
+        else:
+            @jax.jit
+            def sigma_all(params, images, labels):
+                """(K, D̂) sigma scores."""
+                f = functools.partial(client_mod.per_sample_sigma,
+                                      features_fn=model.features,
+                                      method=cfg.sigma_method,
+                                      loss_fn=model.loss_fn)
+                return jax.vmap(lambda im, lb: f(params, im, lb))(images,
+                                                                  labels)
 
         @jax.jit
         def local_grads(params, images, labels, delta):
@@ -272,7 +287,10 @@ class FEELTrainer:
             # warmup: resource allocation as proposed, selection = all
             match = joint_mod.matching_mod.swap_matching(
                 sys, state.h, state.alpha,
-                evaluator=cfg.power_evaluator, telemetry=tele)
+                evaluator=cfg.power_evaluator,
+                mode=(cfg.matching_mode
+                      if cfg.power_evaluator == "closed_form" else "auto"),
+                telemetry=tele)
             with tele.stage("selection"):
                 pass  # warmup selects everything; keep the stage present
             dec = joint_mod._finish(sys, match.rho, match.p,
@@ -285,7 +303,8 @@ class FEELTrainer:
             dec = joint_mod.proposed_scheme(
                 sys, state, selection_method=cfg.selection_method,
                 power_evaluator=cfg.power_evaluator, gp_steps=cfg.gp_steps,
-                gp_step0=cfg.gp_step0, faults=rf,
+                gp_step0=cfg.gp_step0, matching_mode=cfg.matching_mode,
+                selection_chunk=cfg.selection_chunk, faults=rf,
                 repair_infeasible=self._resilient, telemetry=tele)
         elif cfg.scheme.startswith("baseline"):
             dec = joint_mod.baseline_scheme(sys, state,
@@ -645,7 +664,7 @@ class FEELTrainer:
         try:
             match2 = joint_mod.matching_mod.swap_matching(
                 sys, state.h, surv_j, evaluator="closed_form",
-                telemetry=tele)
+                mode=self.cfg.matching_mode, telemetry=tele)
         except Exception as e:  # keep the round alive
             tele.fault("solver_fail", injected=False, solver="matching",
                        reason=type(e).__name__, context="resolve")

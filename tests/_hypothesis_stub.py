@@ -1,45 +1,207 @@
-"""Import-safe fallback when ``hypothesis`` (an optional test extra,
-see pyproject.toml) is not installed.
+"""Executable fallback when ``hypothesis`` (a test extra, see
+pyproject.toml) is not installed.
 
-A module-level ``pytest.importorskip("hypothesis")`` would skip the
-*entire* test module, losing its plain unit tests too.  Instead the
-test modules do::
+The test modules do::
 
     try:
         from hypothesis import given, settings, strategies as st
-    except ImportError:            # property tests skip, unit tests run
+    except ImportError:
         from _hypothesis_stub import given, settings, st
 
-and only the ``@given``-decorated property tests are skipped.
+Under real hypothesis the property tests get its full engine
+(shrinking, the example database, health checks).  Under this stub
+they still *run*: ``given`` draws a deterministic, seeded, bounded
+batch of examples per test (no shrinking — the failure report simply
+prints the falsifying example).  The subset implemented is exactly
+what tests/ and tests/strategies.py use: ``integers``, ``floats``,
+``booleans``, ``sampled_from``, ``just``, ``one_of``, ``lists``,
+``tuples``, ``composite``, ``.map``/``.filter``, ``assume``,
+``settings(max_examples=, deadline=)``.
 """
-import pytest
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+#: examples per property when ``settings`` doesn't say otherwise —
+#: bounded so a stub run stays CPU-container friendly.
+DEFAULT_MAX_EXAMPLES = 20
+#: give up on a property whose ``assume``/``filter`` rejects this many
+#: consecutive candidates (mirrors hypothesis' filter_too_much).
+MAX_REJECTS = 200
 
 
-def given(*_args, **_kwargs):
-    """Replace the property test with a skip marker."""
+class UnsatisfiedAssumption(Exception):
+    """Raised by ``assume(False)`` — the example is discarded."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+class Strategy:
+    """A seeded sampler: ``_sample(rng) -> value``."""
+
+    def __init__(self, sample):
+        self._sample = sample
+
+    def example_from(self, rng: np.random.Generator):
+        return self._sample(rng)
+
+    def map(self, f) -> "Strategy":
+        return Strategy(lambda rng: f(self._sample(rng)))
+
+    def filter(self, pred) -> "Strategy":
+        def sample(rng):
+            for _ in range(MAX_REJECTS):
+                v = self._sample(rng)
+                if pred(v):
+                    return v
+            raise UnsatisfiedAssumption()
+
+        return Strategy(sample)
+
+
+class _DrawFn:
+    """The ``draw`` callable handed to ``@composite`` functions."""
+
+    def __init__(self, rng: np.random.Generator):
+        self._rng = rng
+
+    def __call__(self, strategy: Strategy):
+        return strategy.example_from(self._rng)
+
+
+class _Strategies:
+    """The ``strategies as st`` namespace."""
+
+    @staticmethod
+    def integers(min_value=0, max_value=None) -> Strategy:
+        if max_value is None:
+            min_value, max_value = 0, min_value
+        return Strategy(lambda rng: int(rng.integers(min_value,
+                                                     max_value + 1)))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kw) -> Strategy:
+        # bounded uniform; nan/inf never produced (matches the
+        # bounded-floats behaviour of real hypothesis)
+        return Strategy(lambda rng: float(min_value + (max_value - min_value)
+                                          * rng.random()))
+
+    @staticmethod
+    def booleans() -> Strategy:
+        return Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    @staticmethod
+    def sampled_from(elements) -> Strategy:
+        elements = list(elements)
+        return Strategy(lambda rng: elements[rng.integers(len(elements))])
+
+    @staticmethod
+    def just(value) -> Strategy:
+        return Strategy(lambda rng: value)
+
+    @staticmethod
+    def one_of(*strategies) -> Strategy:
+        return Strategy(lambda rng: strategies[rng.integers(
+            len(strategies))].example_from(rng))
+
+    @staticmethod
+    def lists(elements: Strategy, min_size: int = 0,
+              max_size: int = 10, **_kw) -> Strategy:
+        def sample(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.example_from(rng) for _ in range(n)]
+
+        return Strategy(sample)
+
+    @staticmethod
+    def tuples(*strategies) -> Strategy:
+        return Strategy(lambda rng: tuple(s.example_from(rng)
+                                          for s in strategies))
+
+    @staticmethod
+    def composite(fn):
+        @functools.wraps(fn)
+        def builder(*args, **kwargs):
+            return Strategy(lambda rng: fn(_DrawFn(rng), *args, **kwargs))
+
+        return builder
+
+
+st = _Strategies()
+
+
+def given(*gargs, **gkwargs):
+    """Run the property over a deterministic, seeded example batch.
+
+    The seed derives from the test's qualified name, so a failure
+    reproduces run to run; the falsifying example is printed in the
+    raised assertion's chain.
+    """
 
     def deco(fn):
-        return pytest.mark.skip(
-            reason="hypothesis not installed (pip install 'repro-feel[test]')"
-        )(fn)
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            max_ex = getattr(wrapper, "_stub_max_examples",
+                             DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__qualname__.encode()))
+            examples = rejects = 0
+            while examples < max_ex:
+                try:
+                    vals = [s.example_from(rng) for s in gargs]
+                    kvals = {k: s.example_from(rng)
+                             for k, s in gkwargs.items()}
+                except UnsatisfiedAssumption:
+                    rejects += 1
+                    if rejects > MAX_REJECTS:
+                        raise RuntimeError(
+                            f"{fn.__qualname__}: strategies rejected "
+                            f"{MAX_REJECTS} candidates in a row")
+                    continue
+                try:
+                    fn(*args, *vals, **kwargs, **kvals)
+                except UnsatisfiedAssumption:
+                    rejects += 1
+                    if rejects > MAX_REJECTS:
+                        raise RuntimeError(
+                            f"{fn.__qualname__}: assume() rejected "
+                            f"{MAX_REJECTS} candidates in a row")
+                    continue
+                except Exception as e:
+                    shown = vals + (sorted(kvals.items()) if kvals else [])
+                    raise AssertionError(
+                        f"falsifying example ({fn.__qualname__}, "
+                        f"example #{examples}): {shown!r}") from e
+                examples += 1
+                rejects = 0
+
+        # pytest must not see the property's drawn parameters as
+        # fixtures: hide the original signature (hypothesis does the
+        # same for parameters its strategies supply).
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        wrapper._stub_given = True
+        return wrapper
 
     return deco
 
 
-def settings(*_args, **_kwargs):
+def settings(max_examples=None, deadline=None, **_kw):
+    """Record the example budget on the (given-wrapped) test."""
+    del deadline  # the stub has no deadline watchdog
+
     def deco(fn):
+        if max_examples is not None:
+            fn._stub_max_examples = int(max_examples)
         return fn
 
     return deco
-
-
-class _AnyStrategy:
-    """Stands in for ``hypothesis.strategies``: any attribute is a
-    callable returning None (strategies are only inspected by ``given``,
-    which the stub ignores)."""
-
-    def __getattr__(self, name):
-        return lambda *a, **k: None
-
-
-st = _AnyStrategy()

@@ -1,0 +1,95 @@
+"""Shared hypothesis strategies for FEEL property tests.
+
+Works under real ``hypothesis`` (CI installs the ``[test]`` extra) and
+under ``tests/_hypothesis_stub.py`` (the seeded bounded fallback) —
+both expose the same ``composite``/``integers``/``floats`` subset.
+
+Array-valued data (channel matrices, sigma scores, mislabel masks) is
+derived from a drawn integer seed through ``np.random.default_rng``
+rather than element-wise float strategies: examples stay small and
+reproducible, and under real hypothesis shrinking works on the seed
+and the shape parameters, which is what matters for these solvers.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+try:
+    from hypothesis import strategies as st
+except ImportError:  # pragma: no cover - exercised in stub-only envs
+    from _hypothesis_stub import st
+
+from repro.core import default_system
+
+
+@st.composite
+def system_params(draw, max_k: int = 6, max_n: int = 4, max_q: int = 3,
+                  min_k: int = 2):
+    """A small random ``SystemParams`` (paper Table-I shape).
+
+    Capacity N*Q is NOT forced to cover K — partial matchings are part
+    of the contract under test.
+    """
+    K = draw(st.integers(min_k, max_k))
+    N = draw(st.integers(1, max_n))
+    Q = draw(st.integers(1, max_q))
+    D_hat = draw(st.integers(8, 64))
+    lam = draw(st.floats(1e-4, 1e-2))
+    return default_system(K=K, N=N, Q=Q, D_hat=D_hat, lam=lam)
+
+
+@st.composite
+def channel_matrix(draw, K: int, N: int, mean_gain: float = 1e-5):
+    """(K, N) i.i.d. gamma channel gains from a drawn seed."""
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    return rng.gamma(2.0, mean_gain / 2.0, size=(K, N))
+
+
+@st.composite
+def availability(draw, K: int, p_avail: float = 0.8):
+    """(K,) 0/1 availability draw with at least one available device."""
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    alpha = (rng.random(K) < p_avail).astype(np.float64)
+    if alpha.sum() == 0:
+        alpha[rng.integers(K)] = 1.0
+    return alpha
+
+
+@st.composite
+def matching_instance(draw, max_k: int = 6, max_n: int = 4,
+                      max_q: int = 3, min_k: int = 2):
+    """(sys, h, alpha) ready for ``swap_matching``."""
+    sys_ = draw(system_params(max_k=max_k, max_n=max_n, max_q=max_q,
+                              min_k=min_k))
+    h = draw(channel_matrix(sys_.K, sys_.N))
+    alpha = draw(availability(sys_.K))
+    return sys_, h, alpha
+
+
+@st.composite
+def sigma_scores(draw, K: int, J: int):
+    """(K, J) nonnegative per-sample gradient-norm scores."""
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    return rng.gamma(2.0, 1.0, size=(K, J)).astype(np.float32)
+
+
+@st.composite
+def mislabel_mask(draw, K: int, J: int):
+    """(K, J) boolean mislabel indicator with drawn corruption rate."""
+    seed = draw(st.integers(0, 2**31 - 1))
+    prop = draw(st.floats(0.0, 0.5))
+    rng = np.random.default_rng(seed)
+    return rng.random((K, J)) < prop
+
+
+@st.composite
+def selection_instance(draw, max_k: int = 6, max_j: int = 24):
+    """(sys, sigma, mask) ready for the data-selection solvers."""
+    sys_ = draw(system_params(max_k=max_k))
+    J = draw(st.integers(2, max_j))
+    sigma = draw(sigma_scores(sys_.K, J))
+    mask = np.ones((sys_.K, J), np.float32)
+    return sys_, sigma, mask

@@ -1,0 +1,235 @@
+"""Property-based equivalence suite for the batched solver layer (PR 10).
+
+The batched paths are pure performance rewrites — each test here pins
+one of them to its scalar/unbatched reference:
+
+* ``swap_matching(mode="batched")`` replays the scalar first-improvement
+  sweep move for move, so assignments, swap counts and sweep counts are
+  *identical* (not merely objective-tied).
+* the bucketed ``power._inner_solve`` pads the active set to a static
+  bucket; padding slots are masked out of the objective, gradient and
+  Hessian, so the Newton trajectory matches the effectively-unpadded
+  solve (``pad_to=m``) bit for bit up to float tolerance.
+* ``gradient_projection(device_chunk=...)`` runs Algorithm 4 over
+  ``lax.map`` device blocks; the objective is separable per device so
+  the iterates match the full-matrix path exactly.
+* ``fed.client.batched_sigma`` fuses the per-device vmapped sigma into
+  one flat forward pass + the row-norm kernel.
+
+Runs under real ``hypothesis`` when installed, else under
+tests/_hypothesis_stub.py (same API, seeded bounded examples).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_stub import given, settings, st
+
+import strategies as strat
+from repro.core import default_system, matching, power, selection
+
+
+# ----------------------------------------------------- matching: batched
+
+def _both_modes(sys_, h, alpha, **kw):
+    rs = matching.swap_matching(sys_, h, alpha, mode="scalar", **kw)
+    rb = matching.swap_matching(sys_, h, alpha, mode="batched", **kw)
+    return rs, rb
+
+
+def _assert_same_decisions(rs, rb):
+    assert rs.mode == "scalar" and rb.mode == "batched"
+    np.testing.assert_array_equal(rs.assign, rb.assign)
+    np.testing.assert_array_equal(rs.rho, rb.rho)
+    assert rs.swaps == rb.swaps
+    assert rs.sweeps == rb.sweeps
+    assert rs.feasible == rb.feasible
+    np.testing.assert_array_equal(np.sort(rs.unmatched),
+                                  np.sort(rb.unmatched))
+    # equal assignments must price identically (inf == inf when the
+    # closed-form power is infeasible for the final matching)
+    if np.isinf(rs.cost) or np.isinf(rb.cost):
+        assert np.isinf(rs.cost) and np.isinf(rb.cost)
+    else:
+        assert abs(rs.cost - rb.cost) <= 1e-6 * max(abs(rs.cost), 1.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(strat.matching_instance())
+def test_batched_matching_replays_scalar_decisions(inst):
+    sys_, h, alpha = inst
+    _assert_same_decisions(*_both_modes(sys_, h, alpha))
+
+
+@settings(max_examples=10, deadline=None)
+@given(strat.matching_instance(max_k=6, max_n=3, max_q=2))
+def test_batched_matching_equivalent_without_moves(inst):
+    """allow_moves=False restricts the sweep to swaps only — the
+    batched enumeration must honour the same restriction."""
+    sys_, h, alpha = inst
+    _assert_same_decisions(*_both_modes(sys_, h, alpha,
+                                        allow_moves=False))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_batched_matching_equivalent_above_auto_threshold(seed):
+    """A draw at K >= AUTO_BATCH_MIN — the regime auto actually routes
+    to the batched sweep — still replays the scalar decisions."""
+    K, N = matching.AUTO_BATCH_MIN + 8, 5
+    rng = np.random.default_rng(seed)
+    sys_ = default_system(K=K, N=N, Q=-(-K // N))
+    h = rng.gamma(2.0, 1e-5, size=(K, N))
+    alpha = np.ones(K)
+    rs, rb = _both_modes(sys_, h, alpha)
+    _assert_same_decisions(rs, rb)
+    auto = matching.swap_matching(sys_, h, alpha, mode="auto")
+    assert auto.mode == "batched"
+    np.testing.assert_array_equal(auto.assign, rs.assign)
+
+
+def test_auto_mode_dispatch():
+    """auto = scalar below AUTO_BATCH_MIN available devices, batched at
+    or above it (closed_form evaluator only)."""
+    rng = np.random.default_rng(0)
+    small = default_system(K=4, N=2, Q=2)
+    res = matching.swap_matching(small, rng.gamma(2.0, 1e-5, size=(4, 2)),
+                                 np.ones(4), mode="auto")
+    assert res.mode == "scalar"
+    K = matching.AUTO_BATCH_MIN
+    big = default_system(K=K, N=8, Q=-(-K // 8))
+    res = matching.swap_matching(big, rng.gamma(2.0, 1e-5, size=(K, 8)),
+                                 np.ones(K), mode="auto")
+    assert res.mode == "batched"
+
+
+def test_mode_validation():
+    sys_ = default_system(K=3, N=2, Q=2)
+    h = np.full((3, 2), 1e-5)
+    with pytest.raises(ValueError, match="unknown matching mode"):
+        matching.swap_matching(sys_, h, np.ones(3), mode="vectorised")
+    with pytest.raises(ValueError, match="closed_form"):
+        matching.swap_matching(sys_, h, np.ones(3), evaluator="ccp",
+                               mode="batched")
+    # auto + ccp silently stays scalar (documented fallback)
+    res = matching.swap_matching(sys_, h, np.ones(3), evaluator="ccp",
+                                 mode="auto")
+    assert res.mode == "scalar"
+
+
+# ------------------------------------------- power: bucketed inner solve
+
+def _ccp_inner_setup(seed):
+    """A fixed-shape (K=6, N=3) subproblem so every example reuses one
+    compiled Newton step; only the channel draw varies."""
+    rng = np.random.default_rng(seed)
+    sys_ = default_system(K=6, N=3, Q=2)
+    h = rng.gamma(2.0, 1e-5, size=(6, 3))
+    alpha = np.ones(6)
+    res = matching.swap_matching(sys_, h, alpha)
+    rho = jnp.asarray(res.rho, jnp.float32)
+    h_j = jnp.asarray(h, jnp.float32)
+    alpha_j = jnp.asarray(alpha, jnp.float32)
+    p_cf, feas = power.closed_form_power(sys_, rho, h_j, alpha_j)
+    if not (res.feasible and bool(jnp.all(feas))):
+        return None
+    active = rho * alpha_j[:, None]
+    weaker = power._weaker(h_j, active)
+    mask_k = (jnp.sum(active, axis=1) > 0).astype(jnp.float32) * alpha_j
+    p0 = jnp.minimum(p_cf * 1.5, sys_.p_max[:, None] * rho * (1 - 1e-4))
+    return sys_, p0, rho, h_j, alpha_j, weaker, mask_k
+
+
+@pytest.mark.slow
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_bucketed_inner_solve_matches_unpadded(seed):
+    """The bucketed solve (pad to 8) equals the exact-size solve
+    (pad_to=m): pad slots must contribute nothing to the barrier,
+    gradient or Hessian."""
+    setup = _ccp_inner_setup(seed)
+    if setup is None:
+        return
+    sys_, p0, rho, h, alpha, weaker, mask_k = setup
+    m = int(np.count_nonzero(np.asarray(rho * alpha[:, None]) > 0))
+    p_bucket = power._inner_solve(sys_, p0, rho, h, alpha, weaker, mask_k)
+    p_exact = power._inner_solve(sys_, p0, rho, h, alpha, weaker, mask_k,
+                                 pad_to=m)
+    assert power._bucket_size(m) >= m
+    np.testing.assert_allclose(np.asarray(p_bucket), np.asarray(p_exact),
+                               rtol=1e-6, atol=1e-9)
+
+
+@pytest.mark.slow
+def test_bucketed_ccp_cost_matches_closed_form():
+    """End-to-end CCP through the bucketed inner solve still lands on
+    the closed-form optimum of (28)."""
+    rng = np.random.default_rng(3)
+    sys_ = default_system(K=6, N=3, Q=2)
+    h = rng.gamma(2.0, 1e-5, size=(6, 3))
+    res = matching.swap_matching(sys_, h, np.ones(6))
+    rho = jnp.asarray(res.rho, jnp.float32)
+    h_j = jnp.asarray(h, jnp.float32)
+    p_cf, _ = power.closed_form_power(sys_, rho, h_j, jnp.ones(6))
+    cost_cf = float(jnp.sum(sys_.c[:, None] * rho * p_cf) * sys_.T)
+    out = power.ccp_power(sys_, rho, h_j, jnp.ones(6))
+    assert out.feasible
+    cost = float(jnp.sum(sys_.c[:, None] * rho * out.p) * sys_.T)
+    assert abs(cost - cost_cf) / cost_cf < 5e-3
+
+
+# -------------------------------------------- selection: chunked GP path
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from((1, 3, 4)))
+def test_chunked_gp_matches_full_matrix(seed, chunk):
+    """device_chunk splits Alg. 4 into lax.map blocks; the objective is
+    separable per device so the iterates are identical."""
+    rng = np.random.default_rng(seed)
+    sys_ = default_system(K=10, D_hat=32)
+    sigma = jnp.asarray(rng.gamma(2.0, 1.0, size=(10, 16)), jnp.float32)
+    mask = jnp.ones((10, 16), jnp.float32)
+    full = selection.gradient_projection(sys_, sigma, mask, steps=40)
+    chunked = selection.gradient_projection(sys_, sigma, mask, steps=40,
+                                            device_chunk=chunk)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(full),
+                               rtol=1e-6, atol=1e-7)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_chunked_faithful_selection_same_binary_choice(seed):
+    rng = np.random.default_rng(seed)
+    sys_ = default_system(K=8, D_hat=24)
+    sigma = jnp.asarray(rng.gamma(2.0, 1.0, size=(8, 12)), jnp.float32)
+    mask = jnp.ones((8, 12), jnp.float32)
+    full = selection.faithful_selection(sys_, sigma, mask, steps=40)
+    chunked = selection.faithful_selection(sys_, sigma, mask, steps=40,
+                                           device_chunk=3)
+    np.testing.assert_array_equal(np.asarray(chunked), np.asarray(full))
+
+
+# ------------------------------------------------- client: batched sigma
+
+def test_batched_sigma_matches_vmapped_reference():
+    """The fused (K*D) forward + row-norm-kernel sigma equals the
+    per-device vmapped ``per_sample_sigma`` to float32 tolerance."""
+    from repro.fed import client
+    from repro.models import cnn
+
+    cc = cnn.CNNConfig(side=8)
+    params = cnn.init(jax.random.PRNGKey(0), cc)
+    K, D = 4, 6
+    images = jax.random.normal(jax.random.PRNGKey(1), (K, D, 8, 8))
+    labels = jax.random.randint(jax.random.PRNGKey(2), (K, D), 0, 10)
+    ref = jax.vmap(
+        lambda im, lb: client.per_sample_sigma(params, im, lb,
+                                               cnn.features))(images, labels)
+    fused = client.batched_sigma(params, images, labels, cnn.features)
+    assert fused.shape == (K, D)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(ref),
+                               rtol=5e-6, atol=1e-8)
